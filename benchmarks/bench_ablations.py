@@ -1,0 +1,88 @@
+"""Catapult-mechanism ablations (beyond the paper's sweeps).
+
+  ablate/no_fallback   — drop the medoid from the start set: §3.2 claims
+                         the fallback is what guarantees baseline recall;
+                         without it, cold/stale buckets must hurt.
+  ablate/serendipity   — usage/benefit for queries NEVER seen before that
+                         share LSH regions with past traffic (§3.2's
+                         serendipity argument, measured).
+  ablate/won_rate      — how often the best start was a catapult rather
+                         than the medoid (stricter than 'used').
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import VP, make_engine, shared_graph
+from repro.core import brute_force_knn, recall_at_k
+from repro.core.beam_search import SearchSpec, beam_search_l2
+from repro.core import buckets as bk
+from repro.core import lsh as lsh_mod
+from repro.data.workloads import make_medrag_zipf
+
+
+def run(n=8_000, n_queries=2_048, k=4) -> list[str]:
+    wl = make_medrag_zipf(n=n, n_queries=n_queries)
+    adj, med = shared_graph(wl)
+    jadj, jvec = jnp.asarray(adj), jnp.asarray(wl.corpus)
+    truth = brute_force_knn(wl.corpus, wl.queries, k)
+    spec = SearchSpec(beam_width=max(k, 2), k=k, max_iters=4 * k + 64)
+    out = []
+
+    # --- no_fallback: catapult starts only (medoid dropped when bucket hot)
+    lsh = lsh_mod.make_lsh(jax.random.PRNGKey(0), 8, wl.corpus.shape[1])
+    buckets = bk.make_buckets(256, 40)
+    rec_with, rec_without = [], []
+    for lo in range(0, n_queries, 256):
+        q = jnp.asarray(wl.queries[lo: lo + 256])
+        h = lsh_mod.hash_codes(lsh, q)
+        cat_ids, _ = bk.lookup(buckets, h)
+        medcol = jnp.full((256, 1), med, jnp.int32)
+        with_fb = jnp.concatenate([cat_ids, medcol], axis=1)
+        no_fb = jnp.where(jnp.any(cat_ids >= 0, axis=1, keepdims=True),
+                          jnp.concatenate(
+                              [cat_ids, jnp.full((256, 1), -1, jnp.int32)],
+                              axis=1),
+                          with_fb)
+        r1 = beam_search_l2(jadj, jvec, q, with_fb, spec)
+        r2 = beam_search_l2(jadj, jvec, q, no_fb, spec)
+        t = truth[lo: lo + 256]
+        rec_with.append(recall_at_k(np.asarray(r1.ids), t))
+        rec_without.append(recall_at_k(np.asarray(r2.ids), t))
+        buckets = bk.publish(buckets, h, r1.ids[:, 0],
+                             jnp.full((256,), -1, jnp.int32))
+    out.append(f"ablate/no_fallback,0,recall_with_medoid="
+               f"{np.mean(rec_with):.3f};recall_without="
+               f"{np.mean(rec_without):.3f}")
+
+    # --- serendipity: unseen queries in warm regions
+    eng = make_engine(wl, "catapult")
+    warm = wl.queries[: n_queries // 2]
+    for lo in range(0, warm.shape[0], 256):
+        eng.search(warm[lo: lo + 256], k=k, beam_width=max(k, 2))
+    rng = np.random.default_rng(99)
+    # fresh paraphrases: same clusters, new noise — never-seen vectors
+    fresh = (warm[rng.integers(0, warm.shape[0], 512)]
+             + 0.2 * rng.normal(size=(512, wl.corpus.shape[1]))
+             ).astype(np.float32)
+    ids, _, st = eng.search(fresh, k=k, beam_width=max(k, 2))
+    t = brute_force_knn(wl.corpus, fresh, k)
+    out.append(f"ablate/serendipity,0,usage={st.used.mean():.2f};"
+               f"won={st.won.mean():.2f};recall={recall_at_k(ids, t):.3f};"
+               f"hops={st.hops.mean():.1f}")
+
+    # --- won rate across k (stricter-than-usage benefit measure)
+    eng2 = make_engine(wl, "catapult")
+    for kk in (1, 8):
+        for rep in range(2):
+            _, _, st = eng2.search(wl.queries[:1024], k=kk,
+                                   beam_width=max(kk, 2))
+        out.append(f"ablate/won_rate/k{kk},0,used={st.used.mean():.2f};"
+                   f"won={st.won.mean():.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,69 @@
+"""Paper Fig. 2: the Proximity cache collapses under dynamic insertion;
+CatapultDB (edges in the graph, LRU-refresh) adapts.
+
+Protocol (paper §2.3): populate the DB, replay a Zipf query stream; in
+the dynamic run, insert a batch of new vectors every 50 queries.  Report
+median recall static vs. dynamic for the cache, and the same for
+CatapultDB (which must NOT degrade).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import VP
+from repro.core import VectorSearchEngine, brute_force_knn, recall_at_k
+from repro.core import proximity_cache as pc
+from repro.data.workloads import make_medrag_zipf
+
+
+def _median_recall(per_query: list[float]) -> float:
+    return float(np.median(per_query))
+
+
+def run(n=6_000, n_queries=1_000, k=5, batch=50, insert_every=50,
+        insert_batch=250, tau=2.0) -> list[str]:
+    wl = make_medrag_zipf(n=n, n_queries=n_queries, d=32)
+    rng = np.random.default_rng(9)
+    out = []
+    for dynamic in (False, True):
+        eng = VectorSearchEngine(mode="diskann", vamana=VP,
+                                 capacity=n + 8_000).build(wl.corpus)
+        cat = VectorSearchEngine(mode="catapult", vamana=VP,
+                                 capacity=n + 8_000).build(wl.corpus)
+        cache = pc.make_cache(capacity=512, dim=wl.corpus.shape[1], k=k)
+        cache_rec, cat_rec = [], []
+        for lo in range(0, n_queries, batch):
+            q = wl.queries[lo: lo + batch]
+            if dynamic and lo > 0 and (lo // batch) % (insert_every // batch
+                                                       or 1) == 0:
+                centers = q[rng.integers(0, q.shape[0], insert_batch)]
+                newv = centers + 0.05 * rng.normal(
+                    size=(insert_batch, q.shape[1])).astype(np.float32)
+                eng.insert(newv.astype(np.float32))
+                cat.insert(newv.astype(np.float32))
+            # Proximity path: probe; misses go to the (DiskANN) engine
+            hit = pc.cache_probe(cache, jnp.asarray(q), jnp.float32(tau))
+            ids_db, _, _ = eng.search(q, k=k, beam_width=2 * k)
+            served = np.where(np.asarray(hit.hit)[:, None],
+                              np.asarray(hit.ids), ids_db)
+            cache = pc.cache_insert(cache, jnp.asarray(q),
+                                    jnp.asarray(ids_db),
+                                    ~jnp.asarray(hit.hit))
+            ids_cat, _, _ = cat.search(q, k=k, beam_width=2 * k)
+            truth = brute_force_knn(eng._vec_np[: eng.n_active], q, k)
+            for row in range(q.shape[0]):
+                cache_rec.append(recall_at_k(served[row: row + 1],
+                                             truth[row: row + 1]))
+                cat_rec.append(recall_at_k(ids_cat[row: row + 1],
+                                           truth[row: row + 1]))
+        tag = "dynamic" if dynamic else "static"
+        out.append(f"fig2_proximity/{tag},0,"
+                   f"median_recall={_median_recall(cache_rec):.3f}")
+        out.append(f"fig2_catapult/{tag},0,"
+                   f"median_recall={_median_recall(cat_rec):.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,23 @@
+"""Paper Fig. 10: filtered queries (Papers workload) — CatapultDB vs
+DiskANN with per-label entry points, sweeping beam width."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, stream
+from repro.data.workloads import make_papers
+
+K_SWEEP = (1, 4, 8, 16)
+
+
+def run(n=8_000, n_queries=2_048) -> list[str]:
+    wl = make_papers(n=n, n_queries=n_queries)
+    rows = []
+    for mode in ("diskann", "catapult"):
+        eng = make_engine(wl, mode)
+        for k in K_SWEEP:
+            rows.append(stream(eng, wl, k=k,
+                               name=f"fig10_papers/{mode}/k{k}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,27 @@
+"""Paper Fig. 11: (b × L) sensitivity heatmap on the TripClick workload.
+
+The paper finds b=40, L=8 optimal with robust neighborhoods; the weakest
+corner is (b=5, L=2).
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, stream
+from repro.data.workloads import make_tripclick
+
+B_SWEEP = (5, 10, 20, 40)
+L_SWEEP = (2, 4, 8, 12)
+
+
+def run(n=10_000, n_queries=2_048, k=8) -> list[str]:
+    wl = make_tripclick(n=n, n_queries=n_queries)
+    rows = []
+    for b in B_SWEEP:
+        for l in L_SWEEP:
+            eng = make_engine(wl, "catapult", n_bits=l, bucket_capacity=b)
+            rows.append(stream(eng, wl, k=k,
+                               name=f"fig11_heatmap/b{b}_L{l}"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

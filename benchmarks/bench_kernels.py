@@ -1,0 +1,52 @@
+"""Pallas kernel micro-benchmarks (interpret mode on CPU — correctness
+and call overhead; MXU-shape sanity lives in the dry-run)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(1024, 128)).astype(np.float32))
+    ids = jnp.asarray(rng.integers(0, 1024, 64).astype(np.int32))
+    h = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+    lut = jnp.asarray((rng.normal(size=(16, 256)) ** 2).astype(np.float32))
+    codes = jnp.asarray(rng.integers(0, 256, size=(1024, 16)).astype(np.int32))
+    rows = [
+        ("kernel/l2_distance", lambda: ops.l2_distance(q, x),
+         lambda: ref.l2_distance_ref(q, x)),
+        ("kernel/gather_distance", lambda: ops.gather_distance(x, ids, q[0]),
+         lambda: ref.gather_distance_ref(x, ids, q[0])),
+        ("kernel/lsh_hash", lambda: ops.lsh_hash(q, h),
+         lambda: ref.lsh_hash_ref(q, h)),
+        ("kernel/pq_adc", lambda: ops.pq_adc(lut, codes),
+         lambda: ref.pq_adc_ref(lut, codes)),
+    ]
+    out = []
+    for name, op, oracle in rows:
+        got, want = np.asarray(op()), np.asarray(oracle())
+        ok = np.allclose(got[np.isfinite(got)], want[np.isfinite(want)],
+                         rtol=1e-3, atol=1e-3)
+        us = _time(lambda: op())
+        out.append(f"{name},{us:.1f},allclose={ok}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

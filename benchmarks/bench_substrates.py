@@ -1,0 +1,52 @@
+"""Index-agnosticism quantified: catapult gains over BOTH substrates the
+paper names (DiskANN/Vamana and HNSW), same workload, same layer."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import VP, make_engine, stream
+from repro.core import brute_force_knn, recall_at_k
+from repro.core.hnsw import HnswEngine
+from repro.data.workloads import make_medrag_zipf
+
+
+def run(n=8_000, n_queries=2_048, k=4) -> list[str]:
+    wl = make_medrag_zipf(n=n, n_queries=n_queries)
+    out = []
+
+    # DiskANN substrate (from the main harness, for the side-by-side)
+    for mode in ("diskann", "catapult"):
+        r = stream(make_engine(wl, mode), wl, k=k,
+                   name=f"substrate/vamana/{mode}/k{k}")
+        out.append(f"{r.name},{r.us_per_query:.1f},"
+                   f"recall={r.recall:.3f};hops={r.hops:.1f};"
+                   f"ndists={r.ndists:.1f};usage={r.usage:.2f}")
+
+    # HNSW substrate
+    truth = brute_force_knn(wl.corpus, wl.queries, k)
+    for mode in ("plain", "catapult"):
+        eng = HnswEngine(mode=mode).build(wl.corpus, VP)
+        eng.search(wl.queries[:256], k=k, beam_width=2 * k)  # warm/compile
+        ids_all, hops, nds, used = [], [], [], []
+        t0 = time.perf_counter()
+        for lo in range(0, n_queries, 256):
+            ids, _, st = eng.search(wl.queries[lo: lo + 256], k=k,
+                                    beam_width=2 * k)
+            ids_all.append(ids)
+            hops.append(st["hops"])
+            nds.append(st["ndists"])
+            used.append(st["used"])
+        dt = time.perf_counter() - t0
+        rec = recall_at_k(np.concatenate(ids_all), truth)
+        out.append(
+            f"substrate/hnsw/{mode}/k{k},{dt / n_queries * 1e6:.1f},"
+            f"recall={rec:.3f};hops={np.concatenate(hops).mean():.1f};"
+            f"ndists={np.concatenate(nds).mean():.1f};"
+            f"usage={np.concatenate(used).mean():.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

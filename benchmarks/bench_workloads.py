@@ -1,0 +1,39 @@
+"""Paper Figs. 5–9: throughput / recall / traversal stats, three systems ×
+{medrag_zipf, tripclick, uniform} × beam widths.
+
+One module covers Fig. 5+6 (medrag_zipf), Fig. 7 (tripclick), and
+Fig. 8+9 (uniform) — identical harness, different workload, exactly like
+the paper.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_engine, stream
+from repro.data.workloads import make_medrag_zipf, make_tripclick, make_uniform
+
+K_SWEEP = (1, 4, 8, 16)
+SYSTEMS = ("diskann", "lsh_apg", "catapult")
+
+
+def run_workload(wl, *, corpus_tag: str) -> list[str]:
+    rows = []
+    for mode in SYSTEMS:
+        eng = make_engine(wl, mode)
+        for k in K_SWEEP:
+            rows.append(stream(eng, wl, k=k,
+                               name=f"{corpus_tag}/{mode}/k{k}"))
+    return emit(rows)
+
+
+def run(n=12_000, n_queries=3_072) -> list[str]:
+    out = []
+    out += run_workload(make_medrag_zipf(n=n, n_queries=n_queries),
+                        corpus_tag="fig5_6_medrag_zipf")
+    out += run_workload(make_tripclick(n=n, n_queries=n_queries),
+                        corpus_tag="fig7_tripclick")
+    out += run_workload(make_uniform(n=n, n_queries=n_queries),
+                        corpus_tag="fig8_9_uniform")
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,105 @@
+"""Shared benchmark harness: engine construction, streamed search, metrics.
+
+Conventions (mirroring the paper's §4.1.4):
+  * `k` is the paper's beam width — it controls both the retrieval count
+    and the candidates retained during traversal (beam_width == k, with a
+    floor of 2 for beam book-keeping),
+  * the thread count `t` of the paper maps to the query batch size here
+    (batched lanes are the TPU's query-level parallelism),
+  * queries are replayed IN ORDER (temporal locality preserved),
+  * QPS is wall-clock on this host — meaningful as *ratios* between
+    systems (identical code path, same graph), exactly how the paper
+    reports DiskANN-relative gains,
+  * hops / distance computations are hardware-independent and compared
+    against the paper's Fig. 6/9 directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core import (VamanaParams, VectorSearchEngine, brute_force_knn,
+                        recall_at_k)
+from repro.core.vamana import build_vamana
+from repro.data.workloads import Workload
+
+VP = VamanaParams(max_degree=24, build_beam=48, batch=1024)
+
+
+@dataclasses.dataclass
+class StreamResult:
+    name: str
+    qps: float
+    recall: float
+    hops: float
+    ndists: float
+    usage: float
+    us_per_query: float
+
+
+_GRAPH_CACHE: dict = {}
+
+
+def shared_graph(wl: Workload):
+    key = (wl.name, wl.corpus.shape)
+    if key not in _GRAPH_CACHE:
+        _GRAPH_CACHE[key] = build_vamana(wl.corpus, VP)
+    return _GRAPH_CACHE[key]
+
+
+def make_engine(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
+                seed=0) -> VectorSearchEngine:
+    eng = VectorSearchEngine(mode=mode, vamana=VP, n_bits=n_bits,
+                             bucket_capacity=bucket_capacity, seed=seed)
+    if wl.labels is not None:
+        return eng.build(wl.corpus, labels=wl.labels,
+                         n_labels=int(wl.labels.max()) + 1)
+    return eng.build(wl.corpus, prebuilt=shared_graph(wl))
+
+
+def stream(engine: VectorSearchEngine, wl: Workload, *, k: int,
+           batch: int = 256, name: str = "", warm_frac: float = 0.0
+           ) -> StreamResult:
+    """Replay the workload's query stream in order; aggregate stats."""
+    q = wl.queries
+    fl = wl.filter_labels
+    beam = max(k, 2)
+    n = (q.shape[0] // batch) * batch
+    all_ids, hops, nds, usage = [], [], [], []
+    # one warm call so jit compile time never pollutes QPS
+    engine.search(q[:batch], k=k, beam_width=beam,
+                  filter_labels=fl[:batch] if fl is not None else None)
+    t0 = time.perf_counter()
+    for lo in range(0, n, batch):
+        ids, _, st = engine.search(
+            q[lo: lo + batch], k=k, beam_width=beam,
+            filter_labels=fl[lo: lo + batch] if fl is not None else None)
+        all_ids.append(ids)
+        hops.append(st.hops)
+        nds.append(st.ndists)
+        usage.append(st.used)
+    dt = time.perf_counter() - t0
+    ids = np.concatenate(all_ids)
+    start = int(len(ids) * warm_frac)
+    truth = brute_force_knn(
+        wl.corpus, q[:n], k, labels=wl.labels,
+        filter_labels=fl[:n] if fl is not None else None)
+    return StreamResult(
+        name=name, qps=n / dt,
+        recall=recall_at_k(ids[start:], truth[start:]),
+        hops=float(np.concatenate(hops)[start:].mean()),
+        ndists=float(np.concatenate(nds)[start:].mean()),
+        usage=float(np.concatenate(usage)[start:].mean()),
+        us_per_query=dt / n * 1e6)
+
+
+def emit(rows: list[StreamResult], extra_cols=()):
+    out = []
+    for r in rows:
+        out.append(f"{r.name},{r.us_per_query:.1f},"
+                   f"qps={r.qps:.0f};recall={r.recall:.3f};"
+                   f"hops={r.hops:.1f};ndists={r.ndists:.1f};"
+                   f"usage={r.usage:.2f}")
+    return out

@@ -1,0 +1,58 @@
+"""Render the §Dry-run/§Roofline tables from benchmarks/dryrun_results/*.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.make_report [--dir DIR]
+Prints markdown to stdout (pasted into EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x == 0:
+        return "0"
+    return f"{x:.2e}" if x < 1e-3 else f"{x:.3f}"
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="benchmarks/dryrun_results")
+    p.add_argument("--mesh", default="sp", choices=["sp", "mp", "both"])
+    args = p.parse_args()
+
+    rows = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        d = json.load(open(f))
+        tag = "sp" if d["mesh"] == "single_pod" else "mp"
+        if args.mesh != "both" and tag != args.mesh:
+            continue
+        rows.append(d)
+
+    print("| arch | shape | mesh | peak GiB/chip | fits | t_comp s | "
+          "t_mem s | t_coll s | dominant | useful 6ND/HLO | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d["status"] != "ok":
+            print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | — | — | — "
+                  f"| — | — | — | — | skipped: {d.get('reason','')[:40]} |")
+            continue
+        m, r = d["memory"], d["roofline"]
+        peak = m["peak_bytes_per_chip"] / 2 ** 30
+        ur = r.get("useful_ratio")
+        print(f"| {d['arch']} | {d['shape']} | {d['mesh']} | {peak:.1f} | "
+              f"{'Y' if m['fits_16GiB'] else 'N'} | "
+              f"{fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} | "
+              f"{fmt_s(r['t_collective_s'])} | {r['dominant']} | "
+              f"{ur:.2f} | compile {d['compile_s']}s |" if ur is not None
+              else f"| {d['arch']} | {d['shape']} | {d['mesh']} | {peak:.1f} "
+              f"| {'Y' if m['fits_16GiB'] else 'N'} | — | — | — | "
+              f"{r['dominant']} | — | |")
+
+
+if __name__ == "__main__":
+    main()

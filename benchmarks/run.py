@@ -1,0 +1,71 @@
+"""Benchmark harness entry point — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Sections:
+
+  fig5_6_medrag_zipf/*  — throughput/recall/traversal, biased workload
+  fig7_tripclick/*      — real-temporal-locality workload
+  fig8_9_uniform/*      — no-locality worst case
+  fig10_papers/*        — filtered queries
+  fig11_heatmap/*       — (b × L) sensitivity
+  fig2_*                — Proximity staleness vs CatapultDB under inserts
+  kernel/*              — Pallas kernel microbenches (interpret mode)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="smaller corpora (CI-speed)")
+    p.add_argument("--only", default=None,
+                   help="comma-separated section filter")
+    args = p.parse_args()
+
+    from benchmarks import (bench_ablations, bench_dynamic, bench_filtered,
+                            bench_hyperparams, bench_kernels,
+                            bench_substrates, bench_workloads)
+
+    quick = args.quick
+    sections = {
+        "workloads": lambda: bench_workloads.run(
+            n=4_000 if quick else 12_000,
+            n_queries=1_024 if quick else 3_072),
+        "filtered": lambda: bench_filtered.run(
+            n=3_000 if quick else 8_000,
+            n_queries=512 if quick else 2_048),
+        "hyperparams": lambda: bench_hyperparams.run(
+            n=3_000 if quick else 10_000,
+            n_queries=512 if quick else 2_048),
+        "dynamic": lambda: bench_dynamic.run(
+            n=3_000 if quick else 6_000,
+            n_queries=400 if quick else 1_000),
+        "substrates": lambda: bench_substrates.run(
+            n=3_000 if quick else 8_000,
+            n_queries=512 if quick else 2_048),
+        "ablations": lambda: bench_ablations.run(
+            n=3_000 if quick else 8_000,
+            n_queries=512 if quick else 2_048),
+        "kernels": bench_kernels.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        for row in fn():
+            print(row)
+            sys.stdout.flush()
+        print(f"# section {name} done in {time.time() - t0:.0f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

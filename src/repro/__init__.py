@@ -1,0 +1,7 @@
+"""CatapultDB on TPU — workload-aware vector search + serving framework.
+
+Reproduction of "Catapults to the Rescue: Accelerating Vector Search by
+Exploiting Query Locality" (EPFL, CS.DB 2026) as a production-grade
+multi-pod JAX framework.  See README.md / DESIGN.md / EXPERIMENTS.md.
+"""
+__version__ = "1.0.0"

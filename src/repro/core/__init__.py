@@ -1,0 +1,23 @@
+"""repro.core — CatapultDB: workload-aware shortcut edges for graph ANN.
+
+The paper's contribution (catapults, Algorithm 2) plus everything it
+stands on: Vamana construction, DiskANN beam search (Algorithm 1),
+random-hyperplane LSH, FilteredVamana, FreshVamana insertion, PQ, and
+the evaluated baselines (vanilla DiskANN, LSH-APG, the Proximity cache).
+"""
+from repro.core.beam_search import SearchSpec, beam_search, beam_search_l2, l2_dist_fn
+from repro.core.buckets import BucketState, make_buckets, lookup, publish
+from repro.core.catapult import CatapultState, catapulted_lookup, make_catapult_state
+from repro.core.engine import (SearchStats, VectorSearchEngine, brute_force_knn,
+                               recall_at_k)
+from repro.core.lsh import LSHParams, hash_codes, make_lsh
+from repro.core.vamana import VamanaParams, build_vamana, medoid_index, robust_prune
+
+__all__ = [
+    "SearchSpec", "beam_search", "beam_search_l2", "l2_dist_fn",
+    "BucketState", "make_buckets", "lookup", "publish",
+    "CatapultState", "catapulted_lookup", "make_catapult_state",
+    "SearchStats", "VectorSearchEngine", "brute_force_knn", "recall_at_k",
+    "VamanaParams", "build_vamana", "medoid_index", "robust_prune",
+    "LSHParams", "hash_codes", "make_lsh",
+]

@@ -1,0 +1,364 @@
+"""VectorSearchEngine — the deployable facade over the paper's machinery.
+
+One engine object = one index + one acceleration mode:
+
+* ``mode='diskann'``   — vanilla Vamana beam search from the medoid
+                         (the paper's primary baseline),
+* ``mode='catapult'``  — CatapultDB: LSH-bucketed shortcut layer
+                         (the paper's contribution),
+* ``mode='lsh_apg'``   — static data-side LSH entry points (baseline).
+
+Orthogonal features, all composable with every mode exactly as Table 1
+of the paper demands of CatapultDB:
+
+* ``filtered=True``    — FilteredVamana stitched graph + per-label entry
+                         points + predicate-constrained traversal,
+* ``pq_subspaces=M``   — DiskANN-style PQ traversal distances with
+                         full-precision rerank of the final beam,
+* ``insert``/``delete``— FreshVamana online updates (tombstones),
+* sharding             — see ``repro.core.sharded`` for the scatter-gather
+                         multi-device engine used by the dry-run.
+
+The device-side search path is functional and jit-cached per batch shape;
+the host keeps numpy mirrors for graph surgery (build/insert).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import catapult as cat
+from repro.core import filters as flt
+from repro.core import insert as ins
+from repro.core import lsh_apg as apg
+from repro.core import pq as pq_mod
+from repro.core.beam_search import (SearchSpec, beam_search, beam_search_l2,
+                                    l2_dist_fn)
+from repro.core.vamana import VamanaParams, build_vamana
+
+
+class SearchStats(NamedTuple):
+    hops: np.ndarray          # (B,) node expansions
+    ndists: np.ndarray        # (B,) distance computations
+    used: np.ndarray          # (B,) bool catapult used (catapult mode only)
+    won: np.ndarray           # (B,) bool catapult beat fallback
+
+
+def brute_force_knn(vectors: np.ndarray, queries: np.ndarray, k: int,
+                    labels: np.ndarray | None = None,
+                    filter_labels: np.ndarray | None = None,
+                    exclude: np.ndarray | None = None) -> np.ndarray:
+    """Exact ground truth (chunked to bound memory)."""
+    out = np.zeros((queries.shape[0], k), np.int32)
+    for lo in range(0, queries.shape[0], 256):
+        q = queries[lo: lo + 256]
+        d = ((q[:, None, :] - vectors[None, :, :]) ** 2).sum(-1)
+        if exclude is not None:
+            d[:, exclude] = np.inf
+        if filter_labels is not None and labels is not None:
+            fl = filter_labels[lo: lo + 256]
+            mism = (labels[None, :] != fl[:, None]) & (fl[:, None] >= 0)
+            d[mism] = np.inf
+        out[lo: lo + 256] = np.argsort(d, axis=1)[:, :k]
+    return out
+
+
+def recall_at_k(found: np.ndarray, truth: np.ndarray) -> float:
+    """Fraction of true k-NN present in the returned k (paper's metric)."""
+    k = truth.shape[1]
+    hits = sum(len(set(f[:k].tolist()) & set(t.tolist())) for f, t in
+               zip(found, truth))
+    return hits / (truth.shape[0] * k)
+
+
+@dataclasses.dataclass
+class VectorSearchEngine:
+    mode: str = 'catapult'
+    vamana: VamanaParams = dataclasses.field(default_factory=VamanaParams)
+    n_bits: int = 8                 # L (paper default)
+    bucket_capacity: int = 40       # b (paper default)
+    apg_entries: int = 8
+    pq_subspaces: Optional[int] = None
+    seed: int = 0
+    capacity: Optional[int] = None  # adjacency row preallocation for inserts
+
+    # populated by build()
+    n_active: int = 0
+    medoid: int = 0
+    n_labels: int = 0
+    filtered: bool = False
+
+    def build(self, vectors: np.ndarray, labels: np.ndarray | None = None,
+              n_labels: int | None = None,
+              prebuilt=None) -> 'VectorSearchEngine':
+        """prebuilt: optional (adjacency, medoid[, label_entries]) — share
+        one Vamana build across engines (the paper's unified-codebase
+        control: systems differ only in entry-point selection)."""
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        n, d = vectors.shape
+        cap = self.capacity or n
+        self.filtered = labels is not None
+        key = jax.random.PRNGKey(self.seed)
+        k_lsh, k_apg, k_pq = jax.random.split(key, 3)
+
+        if self.filtered:
+            assert n_labels is not None
+            if prebuilt is not None:
+                adj, med, entries = prebuilt
+            else:
+                adj, med, entries = flt.build_stitched_graph(
+                    vectors, labels, n_labels, self.vamana)
+            self.n_labels = n_labels
+            self._label_entry = jnp.asarray(entries)
+            self._labels_np = np.zeros(cap, np.int32)
+            self._labels_np[:n] = labels.astype(np.int32)
+        else:
+            if prebuilt is not None:
+                adj, med = prebuilt[0], prebuilt[1]
+            else:
+                adj, med = build_vamana(vectors, self.vamana, capacity=cap)
+            self._label_entry = None
+            self._labels_np = None
+        adj = adj.copy()   # engines may insert independently
+
+        if cap > adj.shape[0]:
+            grown = np.full((cap, adj.shape[1]), -1, np.int32)
+            grown[: adj.shape[0]] = adj
+            adj = grown
+        self._adj_np = adj
+        self._vec_np = np.zeros((cap, d), np.float32)
+        self._vec_np[:n] = vectors
+        self._tomb_np = np.zeros(cap, bool)
+        # rows >= n are tombstoned until inserted
+        self._tomb_np[n:] = True
+        self.n_active, self.medoid = n, med
+
+        if self.mode == 'catapult':
+            self._cat = cat.make_catapult_state(
+                k_lsh, d, self.n_bits, self.bucket_capacity)
+        elif self.mode == 'lsh_apg':
+            self._apg = apg.build_lsh_apg(vectors, k_apg, self.n_bits,
+                                          self.apg_entries)
+        if self.pq_subspaces:
+            self._pq = pq_mod.train_pq(k_pq, jnp.asarray(vectors),
+                                       self.pq_subspaces)
+            codes = np.zeros((cap, self.pq_subspaces), np.int32)
+            codes[:n] = np.asarray(pq_mod.encode(self._pq, jnp.asarray(vectors)))
+            self._codes_np = codes
+        self._sync_device()
+        return self
+
+    # ---------------------------------------------------------------- device
+    def _sync_device(self) -> None:
+        self._adj = jnp.asarray(self._adj_np)
+        self._vec = jnp.asarray(self._vec_np)
+        self._tomb = jnp.asarray(self._tomb_np)
+        self._labels = (jnp.asarray(self._labels_np)
+                        if self._labels_np is not None else None)
+        if self.pq_subspaces:
+            self._codes = jnp.asarray(self._codes_np)
+
+    def _dist_fn(self):
+        if self.pq_subspaces:
+            return pq_mod.adc_dist_fn(self._pq, self._codes)
+        return l2_dist_fn(self._vec)
+
+    # ---------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, k: int,
+               beam_width: int | None = None,
+               filter_labels: np.ndarray | None = None,
+               max_iters: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Batched k-NN search.  Returns (ids (B,k), dists (B,k), stats)."""
+        queries = jnp.asarray(queries, jnp.float32)
+        b = queries.shape[0]
+        l = beam_width or max(2 * k, 16)
+        # PQ mode reranks the *entire* final beam at full precision
+        # (DiskANN's SSD fetch of the candidate list), so ask the search
+        # for the whole beam, not just k PQ-approximate winners.
+        # max_iters is a SAFETY bound, not a budget: Algorithm 1 terminates
+        # when the beam converges, and the medoid->neighborhood walk can be
+        # long at small beam widths (the whole point of catapults), so the
+        # cap must stay far above typical path lengths.
+        spec = SearchSpec(beam_width=l, k=(l if self.pq_subspaces else k),
+                          max_iters=max_iters or (4 * l + 64))
+        flabels = (jnp.asarray(filter_labels, jnp.int32)
+                   if filter_labels is not None
+                   else jnp.full((b,), -1, jnp.int32))
+
+        if self.mode == 'catapult':
+            new_cat, res, st = _search_catapult(
+                self._cat, self._adj, self._vec, self._tomb, self._labels,
+                self._label_entry, queries, flabels, jnp.int32(self.medoid),
+                spec, self.pq_subspaces or 0,
+                self._pq if self.pq_subspaces else None,
+                self._codes if self.pq_subspaces else None)
+            self._cat = new_cat
+            used, won = np.asarray(st.used), np.asarray(st.won)
+        elif self.mode == 'lsh_apg':
+            res = _search_apg(self._apg, self._adj, self._vec, self._tomb,
+                              self._labels, queries, flabels,
+                              jnp.int32(self.medoid), spec)
+            used = won = np.zeros(b, bool)
+        else:
+            res = _search_diskann(self._adj, self._vec, self._tomb,
+                                  self._labels, self._label_entry, queries,
+                                  flabels, jnp.int32(self.medoid), spec,
+                                  self.pq_subspaces or 0,
+                                  self._pq if self.pq_subspaces else None,
+                                  self._codes if self.pq_subspaces else None)
+            used = won = np.zeros(b, bool)
+
+        ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+        if self.pq_subspaces:   # full-precision rerank (DiskANN final fetch)
+            rr = jax.vmap(partial(pq_mod.rerank, self._vec, k=k))(
+                queries, res.ids)
+            ids, dists = np.asarray(rr[0]), np.asarray(rr[1])
+        stats = SearchStats(hops=np.asarray(res.hops),
+                            ndists=np.asarray(res.ndists), used=used, won=won)
+        return ids, dists, stats
+
+    def search_two_phase(self, queries: np.ndarray, k: int,
+                         beam_width: int | None = None,
+                         phase1_iters: int = 8
+                         ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Convergence-compacted search (beyond-paper optimization).
+
+        A lockstep batch pays max(hops) while catapults cut the *mean*:
+        fast lanes idle behind stragglers.  Phase 1 runs a short iteration
+        budget for the whole batch; unconverged lanes are compacted
+        host-side (padded to a power of two for jit-cache reuse) and
+        phase 2 warm-restarts ONLY them from their phase-1 beams.  Total
+        work ≈ B·M1 + |stragglers|·rest instead of B·max(hops).
+        """
+        queries = np.ascontiguousarray(queries, np.float32)
+        b = queries.shape[0]
+        l = beam_width or max(2 * k, 16)
+        spec1 = SearchSpec(beam_width=l, k=l, max_iters=phase1_iters)
+        if self.mode == 'catapult':
+            new_cat, res, st = _search_catapult(
+                self._cat, self._adj, self._vec, self._tomb, None, None,
+                jnp.asarray(queries), jnp.full((b,), -1, jnp.int32),
+                jnp.int32(self.medoid), spec1, 0, None, None)
+            self._cat = new_cat
+            used = np.asarray(st.used)
+        else:
+            res = _search_diskann(self._adj, self._vec, self._tomb, None,
+                                  None, jnp.asarray(queries),
+                                  jnp.full((b,), -1, jnp.int32),
+                                  jnp.int32(self.medoid), spec1, 0, None,
+                                  None)
+            used = np.zeros(b, bool)
+        ids = np.array(res.ids)
+        dists = np.array(res.dists)
+        hops = np.array(res.hops)
+        ndists = np.array(res.ndists)
+        conv = np.asarray(res.converged)
+
+        if not conv.all():
+            idx = np.nonzero(~conv)[0]
+            # fixed phase-2 chunk => exactly one extra jit signature; the
+            # straggler fraction rarely needs more than one chunk
+            chunk = max(b // 4, 32)
+            spec2 = SearchSpec(beam_width=l, k=l, max_iters=4 * l + 64)
+            for lo in range(0, idx.size, chunk):
+                part = idx[lo: lo + chunk]
+                sel = np.resize(part, chunk)   # pad by repetition
+                res2 = beam_search_l2(self._adj, self._vec,
+                                      jnp.asarray(queries[sel]),
+                                      jnp.asarray(ids[sel], jnp.int32),
+                                      spec2)
+                ids[part] = np.asarray(res2.ids)[: part.size]
+                dists[part] = np.asarray(res2.dists)[: part.size]
+                hops[part] += np.asarray(res2.hops)[: part.size]
+                ndists[part] += np.asarray(res2.ndists)[: part.size]
+        order = np.argsort(dists, axis=1)[:, :k]
+        stats = SearchStats(hops=hops, ndists=ndists, used=used,
+                            won=np.zeros(b, bool))
+        return (np.take_along_axis(ids, order, 1),
+                np.take_along_axis(dists, order, 1), stats)
+
+    # ---------------------------------------------------------------- updates
+    def insert(self, new_vectors: np.ndarray,
+               labels: np.ndarray | None = None) -> None:
+        b = new_vectors.shape[0]
+        start = self.n_active
+        self.n_active = ins.insert_batch(
+            self._adj_np, self._vec_np, self.n_active,
+            np.ascontiguousarray(new_vectors, np.float32), self.medoid,
+            self.vamana)
+        self._tomb_np[start: self.n_active] = False
+        if self._labels_np is not None:
+            self._labels_np[start: self.n_active] = (
+                labels if labels is not None else 0)
+        if self.pq_subspaces:
+            self._codes_np[start: self.n_active] = np.asarray(
+                pq_mod.encode(self._pq, jnp.asarray(self._vec_np[start: self.n_active])))
+        self._sync_device()
+
+    def delete(self, ids: np.ndarray) -> None:
+        self._tomb_np = ins.delete(self._tomb_np, ids)
+        self._tomb = jnp.asarray(self._tomb_np)
+
+
+# ---------------------------------------------------------------------------
+# jit'd search paths (functions of arrays only -> stable cache keys)
+# ---------------------------------------------------------------------------
+
+def _mk_dist(vec, pq_sub, pqcb, codes):
+    if pq_sub:
+        return pq_mod.adc_dist_fn(pqcb, codes)
+    return l2_dist_fn(vec)
+
+
+def _masks(tomb, labels, flabels):
+    def result_mask(ids):
+        return ~tomb[jnp.maximum(ids, 0)]
+
+    neighbor_mask = None
+    if labels is not None:
+        def neighbor_mask(lane, ids):
+            f = flabels[lane]
+            ok = (f < 0) | (labels[jnp.maximum(ids, 0)] == f)
+            return ok | (ids < 0)
+    return neighbor_mask, result_mask
+
+
+@partial(jax.jit, static_argnames=('spec', 'pq_sub'))
+def _search_diskann(adj, vec, tomb, labels, label_entry, queries, flabels,
+                    medoid, spec, pq_sub, pqcb, codes):
+    b = queries.shape[0]
+    if label_entry is not None:
+        starts = jnp.where(flabels >= 0,
+                           label_entry[jnp.maximum(flabels, 0)], medoid)
+    else:
+        starts = jnp.broadcast_to(medoid, (b,))
+    nmask, rmask = _masks(tomb, labels, flabels)
+    return beam_search(adj, queries, starts[:, None].astype(jnp.int32), spec,
+                       _mk_dist(vec, pq_sub, pqcb, codes),
+                       neighbor_mask_fn=nmask, result_mask_fn=rmask)
+
+
+@partial(jax.jit, static_argnames=('spec',))
+def _search_apg(apg_index, adj, vec, tomb, labels, queries, flabels, medoid,
+                spec):
+    starts = apg.entry_points(apg_index, queries, medoid)
+    nmask, rmask = _masks(tomb, labels, flabels)
+    return beam_search(adj, queries, starts, spec, l2_dist_fn(vec),
+                       neighbor_mask_fn=nmask, result_mask_fn=rmask)
+
+
+@partial(jax.jit, static_argnames=('spec', 'pq_sub'))
+def _search_catapult(cat_state, adj, vec, tomb, labels, label_entry, queries,
+                     flabels, medoid, spec, pq_sub, pqcb, codes):
+    nmask, rmask = _masks(tomb, labels, flabels)
+    return cat.catapulted_lookup(
+        cat_state, adj, queries, spec, _mk_dist(vec, pq_sub, pqcb, codes),
+        medoid, filter_labels=flabels, node_labels=labels,
+        label_entry=label_entry, neighbor_mask_fn=nmask,
+        result_mask_fn=rmask)

@@ -1,0 +1,94 @@
+"""FilteredVamana support (paper §2.1.4, §3.4).
+
+Filtered (c,k)-ANN constrains results to nodes whose label satisfies the
+query predicate.  FilteredDiskANN achieves this with (a) per-label entry
+points and (b) label-aware graph construction keeping every label's
+subgraph navigable.  We reproduce both:
+
+* ``label_entry_points`` — medoid of each label class,
+* ``build_stitched_graph`` — the "stitched" FilteredVamana variant: a
+  global Vamana graph unioned with per-label Vamana subgraphs (built on
+  each label's subset), so greedy traversal restricted to one label stays
+  connected.  Degree budget is split between the global and label edges.
+* search-time constraint — a ``neighbor_mask_fn`` that hides
+  non-matching nodes from the beam (catapult destinations are vetted the
+  same way in ``catapult.catapulted_lookup``).
+
+Predicates here are single-label equality (the Papers workload's arXiv
+primary category), matching the paper's filtered evaluation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.vamana import VamanaParams, build_vamana, medoid_index
+
+
+def label_entry_points(vectors: np.ndarray, labels: np.ndarray,
+                       n_labels: int) -> np.ndarray:
+    """Per-label entry point: the medoid of each label's subset."""
+    entries = np.zeros(n_labels, np.int32)
+    for lbl in range(n_labels):
+        idx = np.nonzero(labels == lbl)[0]
+        if idx.size == 0:
+            entries[lbl] = 0
+            continue
+        sub = vectors[idx]
+        entries[lbl] = idx[medoid_index(sub)]
+    return entries
+
+
+def build_stitched_graph(vectors: np.ndarray, labels: np.ndarray,
+                         n_labels: int, params: VamanaParams,
+                         label_degree: int | None = None
+                         ) -> tuple[np.ndarray, int, np.ndarray]:
+    """Global Vamana ∪ per-label Vamana (StitchedVamana).
+
+    Returns (adjacency (N, R_global + R_label), global medoid,
+    per-label entry points).  Rows are -1 padded.
+    """
+    label_degree = label_degree or max(params.max_degree // 2, 8)
+    g_adj, med = build_vamana(vectors, params)
+    n, rg = g_adj.shape
+    out = np.full((n, rg + label_degree), -1, np.int32)
+    out[:, :rg] = g_adj
+
+    sub_params = VamanaParams(max_degree=label_degree, alpha=params.alpha,
+                              build_beam=max(params.build_beam // 2, 16),
+                              batch=params.batch, seed=params.seed + 1)
+    for lbl in range(n_labels):
+        idx = np.nonzero(labels == lbl)[0]
+        if idx.size < 2:
+            continue
+        sub_adj, _ = build_vamana(vectors[idx], sub_params)
+        # remap subgraph-local ids to global and append into the slack slots
+        for local, gid in enumerate(idx):
+            nbrs = sub_adj[local]
+            nbrs = idx[nbrs[nbrs >= 0]]
+            existing = set(out[gid][out[gid] >= 0].tolist())
+            free = np.nonzero(out[gid] == -1)[0]
+            j = 0
+            for nb in nbrs:
+                if nb in existing or j >= free.size:
+                    continue
+                out[gid, free[j]] = nb
+                existing.add(int(nb))
+                j += 1
+    return out, med, label_entry_points(vectors, labels, n_labels)
+
+
+def make_filter_mask_fn(node_labels, filter_labels):
+    """neighbor_mask_fn for beam_search: True keeps the node.
+
+    ``filter_labels``: (B,) per-lane label, -1 = unfiltered lane.
+    Indexed by lane id (beam_search passes the lane index as aux).
+    """
+    import jax.numpy as jnp
+
+    def mask(lane, ids):
+        flt = filter_labels[lane]
+        lbl = node_labels[jnp.maximum(ids, 0)]
+        ok = (flt < 0) | (lbl == flt)
+        return ok | (ids < 0)   # invalid ids handled downstream
+
+    return mask

@@ -1,0 +1,142 @@
+"""Hierarchical (HNSW-style) index — the paper's second named substrate.
+
+CatapultDB claims index-agnosticism over "any index that accepts a hint
+for where to begin the search, such as the entry node in DiskANN or
+HNSW" (paper §1/§3).  This module provides that second substrate so the
+claim is *executable*: a level hierarchy whose upper levels are
+proximity graphs over nested random subsets (the stacked-Vamana
+formulation of HNSW — upper levels here are Vamana graphs rather than
+insert-order NSW graphs, which preserves the navigation-hierarchy
+semantics while reusing the batched builder; recorded as an adaptation).
+
+Search descends greedily from the top-level entry to a level-1 landing
+node, then runs the standard level-0 beam search.  The catapult layer
+plugs in EXACTLY as for DiskANN: its destinations are extra level-0
+starting points, racing the hierarchy's landing node — Algorithm 2
+unchanged, underlying search unchanged.  This is also the SHG contrast
+(paper §5): the hierarchy shortcuts *vertical* navigation from the data
+distribution; catapults shortcut the *horizontal* walk from the query
+workload — they compose.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buckets as bk
+from repro.core import lsh as lsh_mod
+from repro.core.beam_search import SearchSpec, beam_search_l2
+from repro.core.vamana import VamanaParams, build_vamana, medoid_index
+
+
+@dataclasses.dataclass
+class HnswIndex:
+    vectors: jax.Array              # (N, d)
+    level_ids: list                 # per level ≥1: (n_l,) global ids (np)
+    level_adj: list                 # per level ≥1: (n_l, R) local-id adjacency
+    base_adj: jax.Array             # (N, R) level-0 graph
+    entry: int                      # global id of the top-level entry
+
+
+def build_hnsw(vectors: np.ndarray, params: VamanaParams | None = None,
+               level_scale: int = 16, max_levels: int = 4,
+               seed: int = 0) -> HnswIndex:
+    """Nested-subset hierarchy: level l holds ~N/level_scale^l points."""
+    params = params or VamanaParams()
+    rng = np.random.default_rng(seed)
+    n = vectors.shape[0]
+    base_adj, med = build_vamana(vectors, params)
+
+    level_ids, level_adj = [], []
+    ids = np.arange(n)
+    up = dataclasses.replace(params, max_degree=max(params.max_degree // 2, 8),
+                             build_beam=max(params.build_beam // 2, 16))
+    for _ in range(max_levels):
+        keep = max(len(ids) // level_scale, 4)
+        if keep < 4 or len(ids) <= 8:
+            break
+        ids = np.sort(rng.choice(ids, size=keep, replace=False))
+        adj, _ = build_vamana(vectors[ids], up)
+        level_ids.append(ids)
+        level_adj.append(jnp.asarray(adj))
+    if level_ids:
+        top = level_ids[-1]
+        entry = int(top[medoid_index(vectors[top])])
+    else:
+        entry = med
+    return HnswIndex(vectors=jnp.asarray(vectors), level_ids=level_ids,
+                     level_adj=level_adj, base_adj=jnp.asarray(base_adj),
+                     entry=entry)
+
+
+def descend(index: HnswIndex, queries: jax.Array) -> jax.Array:
+    """Greedy top-down walk; returns (B,) level-0 entry candidates."""
+    b = queries.shape[0]
+    cur = jnp.full((b,), index.entry, jnp.int32)
+    spec = SearchSpec(beam_width=2, k=1, max_iters=24)
+    for ids_np, adj in zip(reversed(index.level_ids),
+                           reversed(index.level_adj)):
+        ids = jnp.asarray(ids_np, jnp.int32)
+        # map current global entries into this level's local id space
+        # (entries come from the level above, a subset of this level)
+        local = jnp.searchsorted(ids, cur).astype(jnp.int32)
+        local = jnp.clip(local, 0, ids.shape[0] - 1)
+        res = beam_search_l2(adj, index.vectors[ids], queries,
+                             local[:, None], spec)
+        cur = ids[jnp.maximum(res.ids[:, 0], 0)]
+    return cur
+
+
+def search(index: HnswIndex, queries: jax.Array, spec: SearchSpec,
+           extra_starts: jax.Array | None = None):
+    """Hierarchy descent + level-0 beam search.
+
+    extra_starts: (B, S) additional level-0 starting points — the
+    catapult hook (same contract as DiskANN's medoid slot).
+    """
+    entries = descend(index, queries)[:, None]
+    starts = entries if extra_starts is None else \
+        jnp.concatenate([extra_starts, entries], axis=1)
+    return beam_search_l2(index.base_adj, index.vectors, queries, starts,
+                          spec)
+
+
+@dataclasses.dataclass
+class HnswEngine:
+    """Thin engine facade: HNSW substrate × {plain, catapult} modes."""
+    mode: str = "catapult"
+    n_bits: int = 8
+    bucket_capacity: int = 40
+    seed: int = 0
+
+    def build(self, vectors: np.ndarray,
+              params: VamanaParams | None = None) -> "HnswEngine":
+        self.index = build_hnsw(vectors, params, seed=self.seed)
+        d = vectors.shape[1]
+        self._lsh = lsh_mod.make_lsh(jax.random.PRNGKey(self.seed),
+                                     self.n_bits, d)
+        self._buckets = bk.make_buckets(2 ** self.n_bits,
+                                        self.bucket_capacity)
+        return self
+
+    def search(self, queries: np.ndarray, k: int, beam_width: int = 16):
+        q = jnp.asarray(queries, jnp.float32)
+        b = q.shape[0]
+        spec = SearchSpec(beam_width=max(beam_width, k), k=k,
+                          max_iters=4 * beam_width + 64)
+        if self.mode == "catapult":
+            hashes = lsh_mod.hash_codes(self._lsh, q)
+            cat_ids, _ = bk.lookup(self._buckets, hashes)
+            res = search(self.index, q, spec, extra_starts=cat_ids)
+            self._buckets = bk.publish(self._buckets, hashes, res.ids[:, 0],
+                                       jnp.full((b,), -1, jnp.int32))
+            used = np.asarray(jnp.any(cat_ids >= 0, axis=1))
+        else:
+            res = search(self.index, q, spec)
+            used = np.zeros(b, bool)
+        return (np.asarray(res.ids), np.asarray(res.dists),
+                {"hops": np.asarray(res.hops),
+                 "ndists": np.asarray(res.ndists), "used": used})

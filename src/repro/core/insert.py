@@ -1,0 +1,98 @@
+"""FreshVamana-style dynamic insertion and tombstone deletion (paper §3.2).
+
+CatapultDB's adaptivity claim rests on the underlying index accepting
+online inserts: new vectors may become better catapult destinations, and
+the LRU eviction refreshes buckets passively as the query stream lands on
+them (no invalidation protocol — contrast the Proximity cache's flush).
+
+Insertion follows FreshDiskANN: greedy-search the current graph for the
+new point, RobustPrune its visited set into out-edges, add reverse edges
+with overflow pruning.  The searches are batched on device; the graph
+surgery is host-side numpy exactly like the offline build.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam_search import SearchSpec, beam_search_l2
+from repro.core.vamana import VamanaParams, robust_prune
+
+
+def insert_batch(adjacency: np.ndarray, vectors: np.ndarray, n_active: int,
+                 new_vectors: np.ndarray, medoid: int,
+                 params: VamanaParams) -> int:
+    """Insert ``new_vectors`` into rows [n_active, n_active+B) in place.
+
+    ``adjacency``/``vectors`` must be preallocated with capacity; returns the
+    new n_active.  Mirrors FreshVamana's insert path (search → prune →
+    reverse edges).
+    """
+    b, d = new_vectors.shape
+    cap = adjacency.shape[0]
+    assert n_active + b <= cap, "capacity exceeded; rebuild with larger capacity"
+    vectors[n_active: n_active + b] = new_vectors
+
+    spec = SearchSpec(beam_width=params.build_beam, k=1,
+                      max_iters=params.build_beam * 2, record_scored=True)
+    res = beam_search_l2(jnp.asarray(adjacency), jnp.asarray(vectors),
+                         jnp.asarray(new_vectors),
+                         jnp.full((b, 1), medoid, jnp.int32), spec)
+    scored = np.asarray(res.scored)
+    beam_ids = np.asarray(res.ids)
+    r = adjacency.shape[1]
+    for row in range(b):
+        p = n_active + row
+        cand = np.concatenate([scored[row].ravel(), beam_ids[row]])
+        # Sequential-insert semantics (FreshVamana): later points in a batch
+        # must see earlier ones, or a bulk insert of one tight cluster stays
+        # internally disconnected.  The device search ran against the
+        # pre-batch graph, so add the nearest earlier in-batch points as
+        # prune candidates host-side.
+        if row > 0:
+            earlier = np.arange(n_active, p, dtype=np.int32)
+            d_e = ((vectors[earlier] - vectors[p]) ** 2).sum(axis=1)
+            earlier = earlier[np.argsort(d_e)[:32]]
+            cand = np.concatenate([cand, earlier])
+        pruned = robust_prune(p, cand, vectors, params.alpha, r)
+        adjacency[p] = -1
+        adjacency[p, : pruned.size] = pruned
+        got_in_edge = False
+        for v in pruned:
+            row_v = adjacency[v]
+            if p in row_v:
+                got_in_edge = True
+                continue
+            slot = np.nonzero(row_v == -1)[0]
+            if slot.size:
+                adjacency[v, slot[0]] = p
+                got_in_edge = True
+            else:
+                re = robust_prune(v, np.concatenate([row_v, [p]]), vectors,
+                                  params.alpha, r)
+                adjacency[v] = -1
+                adjacency[v, : re.size] = re
+                got_in_edge = got_in_edge or p in re
+        # Connectivity guarantee beyond FreshVamana: if alpha-pruning dropped
+        # p from every back-edge list (out-of-distribution insert far from
+        # all existing points), force one in-edge at p's nearest neighbor by
+        # replacing that node's farthest out-edge.  Without this, a far
+        # inserted region is unreachable until enough mass accumulates.
+        if not got_in_edge and pruned.size:
+            v0 = pruned[0]          # robust_prune orders by distance
+            row_v = adjacency[v0]
+            d_nb = ((vectors[np.maximum(row_v, 0)] - vectors[v0]) ** 2).sum(1)
+            d_nb[row_v < 0] = -np.inf
+            adjacency[v0, int(np.argmax(d_nb))] = p
+    return n_active + b
+
+
+def delete(tombstones: np.ndarray, ids: np.ndarray) -> np.ndarray:
+    """Tombstone deletion: nodes stay traversable, vanish from results.
+
+    FreshVamana consolidates lazily; our searches pass a ``result_mask_fn``
+    keyed on this array so deleted points never appear in answers.
+    """
+    tombstones = tombstones.copy()
+    tombstones[ids] = True
+    return tombstones

@@ -1,0 +1,63 @@
+"""Random-hyperplane LSH for query-region identification (paper §2.2, §3.2).
+
+CatapultDB partitions the *query* space into ``2**n_bits`` regions with
+sign-of-projection hashing.  This variant is scale-invariant, so no
+dataset-specific calibration is required (contrast: the p-stable LSH in
+LSH-APG, which must be recalibrated when out-of-distribution vectors are
+inserted — paper §1).
+
+Pure-jnp implementation here; the Pallas MXU kernel lives in
+``repro.kernels.lsh_hash`` with this module as its oracle via
+``hash_codes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LSHParams:
+    """Hyperplane normals for random-hyperplane LSH.
+
+    Attributes:
+      hyperplanes: (n_bits, dim) float32 — rows are hyperplane normals drawn
+        from N(0, I).
+    """
+
+    hyperplanes: jax.Array
+
+    @property
+    def n_bits(self) -> int:
+        return self.hyperplanes.shape[0]
+
+    @property
+    def n_buckets(self) -> int:
+        return 2 ** self.hyperplanes.shape[0]
+
+
+def make_lsh(key: jax.Array, n_bits: int, dim: int) -> LSHParams:
+    """Draw ``n_bits`` random hyperplane normals from the standard normal."""
+    return LSHParams(hyperplanes=jax.random.normal(key, (n_bits, dim), jnp.float32))
+
+
+def hash_bits(params: LSHParams, q: jax.Array) -> jax.Array:
+    """Per-hyperplane sign bits.  q: (..., dim) -> (..., n_bits) int32 in {0,1}."""
+    proj = q @ params.hyperplanes.T
+    return (proj >= 0).astype(jnp.int32)
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """(..., n_bits) {0,1} -> (...,) int32 bucket index, bit i weighted 2**i."""
+    weights = (2 ** jnp.arange(bits.shape[-1], dtype=jnp.int32))
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=())
+def hash_codes(params: LSHParams, q: jax.Array) -> jax.Array:
+    """LSH bucket index for each query.  q: (..., dim) -> (...,) int32."""
+    return pack_bits(hash_bits(params, q))

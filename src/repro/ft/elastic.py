@@ -1,0 +1,65 @@
+"""Elastic scaling: re-mesh + reshard on device-count change.
+
+On restart after losing (or gaining) hosts, the launcher calls
+``choose_mesh_shape(n_devices)`` to pick the largest usable (data, model)
+grid, rebuilds the mesh, and restores the checkpoint with the new
+shardings (ft/checkpoint.restore does the re-placement).  Policy:
+
+  * `model` is capped at ``max_model`` (tensor-parallel groups should not
+    outgrow what layer dimensions divide by) and kept as large as the
+    divisor structure allows, preserving per-chip memory headroom;
+  * remaining devices go to `data`; devices that do not factor cleanly
+    are left idle (reported) — correctness over utilization on a degraded
+    cluster;
+  * global batch is kept constant by re-slicing the deterministic data
+    pipeline over the surviving hosts (data/pipeline.py contract).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    data: int
+    model: int
+    idle: int
+
+    @property
+    def used(self) -> int:
+        return self.data * self.model
+
+
+def choose_mesh_shape(n_devices: int, *, max_model: int = 16,
+                      prefer_model: int = 16) -> MeshPlan:
+    """Largest (data, model) grid with model | prefer_model, maximizing
+    used devices then model size."""
+    best = MeshPlan(data=1, model=1, idle=n_devices - 1)
+    for model in range(min(max_model, n_devices), 0, -1):
+        if prefer_model % model != 0:
+            continue
+        data = n_devices // model
+        plan = MeshPlan(data=data, model=model,
+                        idle=n_devices - data * model)
+        if (plan.used, plan.model) > (best.used, best.model):
+            best = plan
+    return best
+
+
+def make_mesh_from_plan(plan: MeshPlan, devices=None):
+    devices = devices if devices is not None else jax.devices()
+    usable = np.asarray(devices[: plan.used]).reshape(plan.data, plan.model)
+    return jax.sharding.Mesh(usable, ("data", "model"))
+
+
+def reshard(tree, pspecs, mesh):
+    """Re-place a host (or differently-sharded) tree onto ``mesh``."""
+    from jax.sharding import NamedSharding
+
+    def one(leaf, spec):
+        return jax.device_put(np.asarray(leaf), NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(one, tree, pspecs)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's artifact optimizes exactly one thing at kernel level — the
+per-hop distance evaluation path (AVX SIMD, PQ in-memory distances,
+overlapped SSD vector fetches).  The TPU-native counterparts:
+
+  l2_distance     — blocked MXU matmul-form squared-L2 tiles
+  gather_distance — scalar-prefetch HBM row gather + distance (the
+                    overlapped "SSD read" of DiskANN, one level up)
+  lsh_hash        — hyperplane projection + sign bit-packing (Alg. 2 line 2)
+  pq_adc          — PQ LUT gather-sum as a one-hot MXU contraction
+
+``ops`` holds the public padded/jit wrappers (interpret=True off-TPU),
+``ref`` the pure-jnp oracles each kernel is verified against.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,56 @@
+"""Scalar-prefetch gather + distance — DiskANN's SSD read, TPU-native.
+
+DiskANN's inner loop reads a node's neighbor vectors from SSD and
+overlaps the read with distance computation on the previous node.  The
+TPU analogue keeps the vector table in HBM and uses
+``PrefetchScalarGridSpec``: the neighbor ids arrive in SMEM *before* the
+grid runs, so the BlockSpec ``index_map`` can dereference them and the
+Pallas pipeline streams each gathered row HBM->VMEM while the previous
+row's distance is computed — the same latency-hiding structure, one
+memory level up (DESIGN.md §3).
+
+Grid = one step per candidate id; each step fetches one (1, d) row and
+emits one squared distance against the VMEM-resident query.  Invalid ids
+(< 0, adjacency padding) fetch row 0 and are masked to +inf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(ids_ref, x_ref, q_ref, o_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)      # (1, d) gathered row
+    q = q_ref[...].astype(jnp.float32)      # (1, d) query (replicated)
+    d = jnp.sum(jnp.square(x - q))
+    o_ref[0] = jnp.where(ids_ref[i] < 0, jnp.inf, d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_distance(vectors: jax.Array, ids: jax.Array, query: jax.Array, *,
+                    interpret: bool = False) -> jax.Array:
+    """(N, d) table, (M,) int32 ids, (d,) query -> (M,) squared distances."""
+    n, d = vectors.shape
+    m = ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            # the gathered row: block index comes from the prefetched ids
+            pl.BlockSpec((1, d), lambda i, ids_ref: (jnp.maximum(ids_ref[i], 0), 0)),
+            # the query, same block every step
+            pl.BlockSpec((1, d), lambda i, ids_ref: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, ids_ref: (i,)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(ids, vectors, query[None, :])

@@ -1,0 +1,81 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Each op pads ragged inputs to kernel block multiples, dispatches to the
+Pallas kernel (compiled on TPU, ``interpret=True`` elsewhere so CPU CI
+executes the same kernel bodies), and slices the result.  The pure-jnp
+oracles live in ``ref.py``; tests assert op == oracle across shape/dtype
+sweeps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.gather_distance import gather_distance as _gather_distance
+from repro.kernels.l2_distance import l2_distance as _l2_distance
+from repro.kernels.lsh_hash import lsh_hash as _lsh_hash
+from repro.kernels.pq_adc import pq_adc as _pq_adc
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_rows(x: jax.Array, mult: int, value=0) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1),
+                   constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_c"))
+def l2_distance(queries: jax.Array, points: jax.Array, *,
+                block_q: int = 128, block_c: int = 128) -> jax.Array:
+    """(B, d) × (C, d) -> (B, C) squared L2, any B/C (padded internally)."""
+    b, c = queries.shape[0], points.shape[0]
+    bq, bc = min(block_q, max(b, 8)), min(block_c, max(c, 8))
+    qp = _pad_rows(queries, bq)
+    pp = _pad_rows(points, bc)
+    out = _l2_distance(qp, pp, block_q=bq, block_c=bc,
+                       interpret=not _on_tpu())
+    return out[:b, :c]
+
+
+@jax.jit
+def gather_distance(vectors: jax.Array, ids: jax.Array,
+                    query: jax.Array) -> jax.Array:
+    """(N, d), (M,) ids, (d,) -> (M,) distances; ids<0 -> +inf."""
+    return _gather_distance(vectors, ids, query, interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_q",))
+def lsh_hash(queries: jax.Array, hyperplanes: jax.Array, *,
+             block_q: int = 128) -> jax.Array:
+    """(B, d) × (L, d) -> (B,) int32 bucket codes, any B."""
+    b = queries.shape[0]
+    bq = min(block_q, max(b, 8))
+    qp = _pad_rows(queries, bq)
+    out = _lsh_hash(qp, hyperplanes, block_q=bq, interpret=not _on_tpu())
+    return out[:b]
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def pq_adc(lut: jax.Array, codes: jax.Array, *, block_c: int = 128) -> jax.Array:
+    """(M, K) LUT × (C, M) codes -> (C,) ADC distances, any C."""
+    c = codes.shape[0]
+    bc = min(block_c, max(c, 8))
+    cp = _pad_rows(codes, bc)
+    out = _pq_adc(lut, cp, block_c=bc, interpret=not _on_tpu())
+    return out[:c]
+
+
+# re-export oracles for convenience in tests/benchmarks
+l2_distance_ref = ref.l2_distance_ref
+gather_distance_ref = ref.gather_distance_ref
+lsh_hash_ref = ref.lsh_hash_ref
+pq_adc_ref = ref.pq_adc_ref

@@ -1,0 +1,55 @@
+"""PQ asymmetric-distance (ADC) kernel — DiskANN's in-memory distances.
+
+DiskANN estimates traversal distances from PQ codes + a per-query lookup
+table.  A scalar gather per (candidate, subspace) is the CPU idiom; on
+TPU scattered VMEM reads serialize badly, so the kernel re-expresses the
+LUT gather as a one-hot contraction on the MXU:
+
+    dist[c] = sum_m LUT[m, code[c, m]]
+            = sum_{m,k} onehot(code)[c, m, k] * LUT[m, k]
+
+The (bc, M*K) one-hot tile and the flattened (M*K,) LUT turn into a
+single ``dot`` — gathers become a matmul, the canonical TPU adaptation
+(DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _adc_kernel(lut_ref, codes_ref, o_ref, *, n_centroids: int):
+    lut = lut_ref[...].astype(jnp.float32)        # (M, K)
+    codes = codes_ref[...]                        # (bc, M) int32
+    m, k = lut.shape
+    # per-subspace one-hot over centroids -> (bc, M, K), flattened so the
+    # whole gather-sum is a single (bc, M*K) @ (M*K,) MXU contraction.
+    onehot = (codes[:, :, None] ==
+              jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2))
+    onehot = onehot.reshape(codes.shape[0], m * k).astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(
+        onehot, lut.reshape(m * k),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def pq_adc(lut: jax.Array, codes: jax.Array, *, block_c: int = 128,
+           interpret: bool = False) -> jax.Array:
+    """(M, K) LUT × (C, M) codes -> (C,) distances.  C must divide block_c."""
+    m, k = lut.shape
+    c, _ = codes.shape
+    assert c % block_c == 0, (c, block_c)
+    return pl.pallas_call(
+        functools.partial(_adc_kernel, n_centroids=k),
+        grid=(c // block_c,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda i: (0, 0)),
+            pl.BlockSpec((block_c, m), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((c,), jnp.float32),
+        interpret=interpret,
+    )(lut, codes)

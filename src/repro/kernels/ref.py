@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth its kernel is tested against
+(tests/test_kernels_*.py sweep shapes/dtypes and assert_allclose).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_distance_ref(queries: jnp.ndarray, points: jnp.ndarray) -> jnp.ndarray:
+    """(B, d), (C, d) -> (B, C) squared L2 distances."""
+    return jnp.sum(
+        jnp.square(queries[:, None, :].astype(jnp.float32)
+                   - points[None, :, :].astype(jnp.float32)), axis=-1)
+
+
+def gather_distance_ref(vectors: jnp.ndarray, ids: jnp.ndarray,
+                        query: jnp.ndarray) -> jnp.ndarray:
+    """(N, d), (M,), (d,) -> (M,) squared L2 distance to each gathered row.
+
+    Invalid ids (< 0) produce +inf, matching beam-search conventions.
+    """
+    x = vectors[jnp.maximum(ids, 0)].astype(jnp.float32)
+    d = jnp.sum(jnp.square(x - query[None, :].astype(jnp.float32)), axis=-1)
+    return jnp.where(ids < 0, jnp.inf, d)
+
+
+def lsh_hash_ref(queries: jnp.ndarray, hyperplanes: jnp.ndarray) -> jnp.ndarray:
+    """(B, d), (L, d) -> (B,) int32 bucket codes (bit i = sign of proj i)."""
+    bits = (queries.astype(jnp.float32) @ hyperplanes.T.astype(jnp.float32)
+            >= 0).astype(jnp.int32)
+    weights = 2 ** jnp.arange(hyperplanes.shape[0], dtype=jnp.int32)
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.int32)
+
+
+def pq_adc_ref(lut: jnp.ndarray, codes: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) LUT, (C, M) codes -> (C,) summed asymmetric distances."""
+    g = jnp.take_along_axis(lut[None, :, :].astype(jnp.float32),
+                            codes[:, :, None], axis=2)[:, :, 0]
+    return g.sum(axis=-1)

@@ -1,0 +1,252 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs   / (chips × 197e12 FLOP/s)     [bf16 MXU]
+    memory term     = HLO_bytes   / (chips × 819e9  B/s)        [HBM]
+    collective term = coll_bytes  / (chips × 50e9   B/s)        [ICI/link]
+
+FLOPs and bytes come from ``compiled.cost_analysis()``.  Collective bytes
+are NOT in cost_analysis: ``collective_bytes`` parses the optimized HLO
+text and sums the output shapes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op.
+
+MODEL_FLOPS (= 6·N·D for dense training, 6·N_active·D for MoE; 2·N·D for
+single forward) is derived analytically from the config so the
+HLO-vs-useful-compute ratio exposes remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e per-chip constants (brief-specified)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+LINK_BW = 50e9            # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> bytes; tuples handled by the caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes per collective kind over the (optimized) HLO."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # match ' <shape> <name> = collective-op(' — the op name follows '='
+        m = re.search(r"=\s+((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|"
+                      r"reduce-scatter|all-to-all|collective-permute)",
+                      s)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        out[op] += _shape_bytes(shape_str)
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_breakdown: dict
+    chips: int
+    model_flops: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / (self.chips * LINK_BW)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        if not self.model_flops or not self.flops:
+            return None
+        return self.model_flops / self.flops
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+        }
+
+
+def analyze(compiled, hlo_text: str, chips: int,
+            model_flops: Optional[float] = None,
+            hbm_bytes: Optional[float] = None) -> RooflineTerms:
+    """FLOPs & collective bytes come from the trip-count-aware HLO walker
+    (hlo_walk.py) — XLA's cost_analysis counts scan bodies once and is
+    useless for scan-over-layers models (verified; see hlo_walk docstring).
+    The walker returns PER-DEVICE totals (the SPMD module is per-device),
+    so terms divide by per-chip peaks directly.  hbm_bytes comes from the
+    analytic traffic model (callers pass analytic_hbm_bytes / chips)."""
+    from repro.launch import hlo_walk
+    walked = hlo_walk.walk(hlo_text)
+    # walker totals are per-device; RooflineTerms stores GLOBAL quantities
+    # (the term properties divide by chips × per-chip peak).
+    coll = {k: float(v) * chips for k, v in walked["collectives"].items()}
+    flops = float(walked["dot_flops"]) * chips
+    if hbm_bytes is None:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        hbm_bytes = float(cost.get("bytes accessed", 0.0))
+    return RooflineTerms(flops=flops, hbm_bytes=hbm_bytes,
+                         coll_bytes=float(sum(coll.values())),
+                         coll_breakdown=coll, chips=chips,
+                         model_flops=model_flops)
+
+
+# --------------------------------------------------------------------------
+# analytic MODEL_FLOPS per arch × shape
+# --------------------------------------------------------------------------
+
+def count_params(cfg, active_only: bool = False) -> float:
+    """Analytic parameter count (active experts only when requested)."""
+    d, v = cfg.d_model, cfg.vocab_size
+    emb = v * d
+    att = (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.head_dim * d \
+        + cfg.n_heads * cfg.head_dim * d
+    mlp = 3 * d * cfg.d_ff
+    if cfg.family in ("dense", "vlm"):
+        layer = att + mlp
+        total = emb + cfg.n_layers * layer
+        if cfg.family == "vlm":
+            total += cfg.frontend_dim * d
+    elif cfg.family == "moe":
+        e = cfg.top_k if active_only else cfg.n_experts
+        moe = e * 3 * d * cfg.moe_d_ff
+        moe += cfg.n_shared_experts * 3 * d * cfg.moe_d_ff
+        if cfg.dense_residual:
+            moe += 3 * d * cfg.d_ff
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        total = emb + n_moe * (att + moe) + cfg.first_dense_layers * (
+            att + 3 * d * (cfg.first_dense_d_ff or cfg.d_ff))
+    elif cfg.family == "ssm":
+        di, n = cfg.d_inner, cfg.ssm_state
+        dt_rank = max(d // 16, 1)
+        layer = (d * 2 * di + di * cfg.conv_width
+                 + di * (dt_rank + 2 * n) + dt_rank * di + di * n + di
+                 + di * d)
+        total = emb + cfg.n_layers * layer
+    elif cfg.family == "hybrid":
+        di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        layer = (d * (2 * di + 2 * n + nh) + (di + 2 * n) * cfg.conv_width
+                 + 2 * nh + di + di * d)
+        shared = att + mlp
+        total = emb + cfg.n_layers * layer + shared
+    elif cfg.family == "encdec":
+        total = emb + cfg.frontend_dim * d \
+            + cfg.n_enc_layers * (att + mlp) \
+            + cfg.n_layers * (2 * att + mlp)
+    else:
+        raise ValueError(cfg.family)
+    return float(total)
+
+
+def model_flops(cfg, shape_kind: str, seq_len: int, global_batch: int
+                ) -> float:
+    """6·N_active·D for train, 2·N_active·D for prefill, 2·N_active·B for
+    one decode token."""
+    n_active = count_params(cfg, active_only=True)
+    if shape_kind == "train":
+        return 6.0 * n_active * seq_len * global_batch
+    if shape_kind == "prefill":
+        return 2.0 * n_active * seq_len * global_batch
+    return 2.0 * n_active * global_batch     # decode: one token
+
+
+def _cache_bytes(cfg, seq_len: int, batch: int) -> float:
+    """Decode-state bytes (KV cache / SSM state), global."""
+    if cfg.family == "ssm":
+        return float(batch * cfg.n_layers
+                     * (cfg.d_inner * cfg.ssm_state * 4         # ssm f32
+                        + (cfg.conv_width - 1) * cfg.d_inner * 2))
+    kv = (cfg.n_layers * batch * seq_len * cfg.n_kv_heads * cfg.head_dim
+          * 2 * 2)                                              # K+V bf16
+    if cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.hybrid_attn_every
+        kv = (g * batch * seq_len * cfg.n_kv_heads * cfg.head_dim * 2 * 2
+              + batch * cfg.n_layers * cfg.d_inner * cfg.ssm_state * 4)
+    if cfg.family == "encdec":
+        kv *= 2   # self + cross
+    return float(kv)
+
+
+def analytic_hbm_bytes(cfg, shape_kind: str, seq_len: int,
+                       global_batch: int) -> float:
+    """Analytic GLOBAL HBM traffic per step.
+
+    Explicit, documented approximation (XLA's byte counter shares the
+    scan-body undercount, so it cannot be used):
+
+      train   = params·(2 read fwd + 2 read remat-fwd + 2 read bwd
+                        + 2 write grad + 2·m opt-read + 2·m opt-write
+                        + 2 read + 2 write param update)
+                + activations: tokens·d_model·2B · L · c   (c≈12: residual
+                  read/write, qkv/mlp internals, flash rescan)
+                + logits: 2 · T·V·2B (write fwd + read bwd)
+      prefill = params·2 + activations(c≈6) + cache write
+      decode  = params·2 + full cache read+write + tiny activations
+    """
+    p = count_params(cfg, active_only=False)
+    t = float(seq_len * global_batch)
+    d = cfg.d_model
+    v = cfg.vocab_size
+    if shape_kind == "train":
+        mom = 4 if getattr(cfg, "name", "") != "arctic-480b" else 2
+        param_traffic = p * (2 + 2 + 2 + 2 + 2 * mom + 2 * mom + 2 + 2)
+        act = t * d * 2 * cfg.n_layers * 12
+        logits = 2 * t * v * 2
+        return float(param_traffic + act + logits)
+    if shape_kind == "prefill":
+        return float(p * 2 + t * d * 2 * cfg.n_layers * 6
+                     + _cache_bytes(cfg, seq_len, global_batch))
+    # decode: weights + cache dominate
+    return float(p * 2 + 2 * _cache_bytes(cfg, seq_len, global_batch)
+                 + global_batch * d * 2 * cfg.n_layers * 8)

@@ -1,0 +1,164 @@
+"""Attention: GQA + sliding-window + softcap, in dense and flash forms.
+
+One implementation covers all assigned attention archs — the per-layer
+*window* is data (a traced scalar), so local and global layers share one
+scanned block body (gemma2's 1:1 and gemma3's 5:1 alternation become a
+per-layer window array; see ``ArchConfig.layer_windows``).
+
+``flash_attention`` is the memory-bounded path for train/prefill: a
+lax.scan over query blocks with an inner scan over KV blocks carrying
+online-softmax statistics — never materializing the (S, S) score matrix.
+``dense_attention`` is the reference (decode steps, smoke tests,
+oracles).  Numerics: scores in f32, softcap before masking, GQA via
+head-group reshape (no KV repetition in memory).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import decl, rope, softcap
+
+NEG_INF = jnp.float32(-2.0 ** 30)
+
+
+def attn_decl(d_model, n_heads, n_kv, head_dim):
+    return {
+        "wq": decl((d_model, n_heads * head_dim), P(None, "model"), 1.0),
+        "wk": decl((d_model, n_kv * head_dim), P(None, "model"), 1.0),
+        "wv": decl((d_model, n_kv * head_dim), P(None, "model"), 1.0),
+        "wo": decl((n_heads * head_dim, d_model), P("model", None), 1.0),
+    }
+
+
+def _mask(q_pos, k_pos, window, causal):
+    """(Sq, Sk) additive mask: causal + sliding window (window = data)."""
+    dq = q_pos[:, None] - k_pos[None, :]
+    ok = (dq >= 0) if causal else jnp.ones_like(dq, bool)
+    ok &= dq < window          # window >= seq_len means global
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def dense_attention(q, k, v, q_pos, k_pos, *, window, causal=True,
+                    attn_softcap=None):
+    """q: (B, Sq, H, Dh); k/v: (B, Sk, KV, Dh).  Reference path."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / (dh ** 0.5)
+    scores = softcap(scores, attn_softcap)
+    scores = scores + _mask(q_pos, k_pos, window, causal)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def flash_attention(q, k, v, q_pos, k_pos, *, window, causal=True,
+                    attn_softcap=None, block_q=512, block_k=512):
+    """Blockwise online-softmax attention (jnp; XLA fuses the inner loop).
+
+    Peak memory per step is (B, KV, G, block_q, block_k) — independent of
+    S.  Both S_q and S_k must divide their block sizes (callers pad).
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
+
+    qb = q.reshape(b, nq, block_q, kv, g, dh).transpose(1, 0, 3, 4, 2, 5)
+    qpb = q_pos.reshape(nq, block_q)
+    kb = k.reshape(b, nk, block_k, kv, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nk, block_k, kv, dh).transpose(1, 0, 3, 2, 4)
+    kpb = k_pos.reshape(nk, block_k)
+
+    @jax.checkpoint
+    def q_step(_, qi):
+        # checkpointed: the backward pass recomputes this q-block's score
+        # tiles instead of saving the (kv-steps × bq × bk) residual stack —
+        # the flash-attention memory contract.  Saved per block: only the
+        # (m, l, out) statistics.
+        qblk, qp = qi                       # (B, KV, G, bq, dh), (bq,)
+
+        @jax.checkpoint
+        def kv_step(carry, ki):
+            # also checkpointed: without it the backward stacks one full
+            # f32 (B, H, bq, S_k) probability panel per q block; with it
+            # only the (m, l, acc) carries persist per kv step.
+            m, l, acc = carry
+            kblk, vblk, kp = ki             # (B, KV, bk, dh), ..., (bk,)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qblk, kblk)
+            s = (s.astype(jnp.float32)) / (dh ** 0.5)
+            s = softcap(s, attn_softcap)
+            s = s + _mask(qp, kp, window, causal)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vblk.dtype), vblk
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, kv, g, block_q), NEG_INF)
+        l0 = jnp.zeros((b, kv, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, kv, g, block_q, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kb, vb, kpb))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return None, out
+
+    _, ob = jax.lax.scan(q_step, None, (qb, qpb))  # (nq, B, KV, G, bq, dh)
+    return ob.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, dh)
+
+
+def best_attention(q, k, v, q_pos, k_pos, *, window, causal=True,
+                   attn_softcap=None):
+    """Dispatch dense vs. flash on (static) sequence sizes: the score
+    matrix must never materialize at prefill/train scale."""
+    sq, sk = q.shape[1], k.shape[1]
+    if sq >= 1024 and sk >= 1024 and sq % 512 == 0 and sk % 512 == 0:
+        return flash_attention(q, k, v, q_pos, k_pos, window=window,
+                               causal=causal, attn_softcap=attn_softcap)
+    return dense_attention(q, k, v, q_pos, k_pos, window=window,
+                           causal=causal, attn_softcap=attn_softcap)
+
+
+def attention_block(params, x, positions, *, cfg, window, kv_cache=None,
+                    cache_pos=None, flash=True):
+    """Full projection + RoPE + attention (+ optional KV-cache update).
+
+    kv_cache: dict(k=(B, Smax, KV, Dh), v=...) or None.
+    cache_pos: () int32 write offset for decode.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ params["wq"]).reshape(b, s, h, dh)
+    k = (x @ params["wk"]).reshape(b, s, kv, dh)
+    v = (x @ params["wv"]).reshape(b, s, kv, dh)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, cache_pos, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, cache_pos, 1)
+        k_pos = jnp.arange(ck.shape[1])
+        new_cache = {"k": ck, "v": cv}
+        # Unwritten cache slots all have k_pos > max(q positions), so the
+        # causal term of the mask hides them; no extra validity mask needed.
+        out = dense_attention(q, ck, cv, positions, k_pos,
+                              window=window, causal=True,
+                              attn_softcap=cfg.attn_softcap)
+    else:
+        new_cache = None
+        fn = flash_attention if (flash and s > 1) else dense_attention
+        out = fn(q, k, v, positions, positions, window=window, causal=True,
+                 attn_softcap=cfg.attn_softcap)
+    out = out.reshape(b, s, h * dh)
+    return out @ params["wo"], new_cache

@@ -1,0 +1,414 @@
+"""Model dispatcher: one declaration/forward/cache API over all families.
+
+Everything is driven by ``ArchConfig.family``:
+
+  dense | moe | vlm  -> attn_stack decoder (per-layer window array)
+  ssm                -> mamba1 stack (attention-free)
+  hybrid             -> zamba2 mamba2 stack + shared attention block
+  encdec             -> encoder_stack + decoder_xattn_stack
+
+Three entry points used by steps / launch / tests:
+
+  decl(cfg)                 -> param declaration tree (shapes + pspecs)
+  loss_fn(cfg, params, batch)        -> scalar LM loss   (train)
+  decode_fn(cfg, params, tokens, cache, pos) -> (logits, new cache)
+
+Declarations materialize as real arrays (``init``) for smoke tests and
+as ShapeDtypeStructs (``specs``) for the dry-run — same tree, same
+pspecs, no drift.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+from repro.models.layers import (decl, embed_decl, embed_lookup,
+                                 init_from_decl, pspecs_from_decl, rms_norm,
+                                 softcap, specs_from_decl, stack_decl,
+                                 unembed)
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def _decl_zero(shape, pspec, scale=None, dtype=None):
+    from repro.models.layers import decl as _d
+    return _d(shape, pspec, scale, dtype=dtype, init="zeros")
+
+
+# --------------------------------------------------------------------------
+# declarations
+# --------------------------------------------------------------------------
+
+def model_decl(cfg: ArchConfig):
+    d = {"embed": embed_decl(cfg.vocab_size, cfg.d_model),
+         "final_norm": decl((cfg.d_model,), P(None), None)}
+    if cfg.family in ("dense", "vlm"):
+        d["layers"] = stack_decl(tf.dense_block_decl(cfg), cfg.n_layers)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        d["layers"] = stack_decl(tf.moe_block_decl(cfg), n_moe)
+        if cfg.first_dense_layers:
+            dense_cfg = _with_ff(cfg, cfg.first_dense_d_ff or cfg.d_ff)
+            d["dense_layers"] = stack_decl(tf.dense_block_decl(dense_cfg),
+                                           cfg.first_dense_layers)
+    elif cfg.family == "ssm":
+        d["layers"] = stack_decl(tf.ssm_block_decl(cfg), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        d["layers"] = {
+            "mamba": stack_decl(tf.ssm_block_decl(cfg), cfg.n_layers),
+            "shared_attn": tf.dense_block_decl(cfg),
+        }
+    elif cfg.family == "encdec":
+        d["enc_layers"] = stack_decl(tf.enc_block_decl(cfg), cfg.n_enc_layers)
+        d["enc_norm"] = decl((cfg.d_model,), P(None), None)
+        d["enc_proj"] = decl((cfg.frontend_dim, cfg.d_model),
+                             P(None, "model"), 1.0)
+        d["layers"] = stack_decl(tf.dec_block_decl(cfg), cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    if cfg.family == "vlm":
+        d["projector"] = decl((cfg.frontend_dim, cfg.d_model),
+                              P(None, "model"), 1.0)
+    return d
+
+
+def _with_ff(cfg, ff):
+    import dataclasses
+    return dataclasses.replace(cfg, d_ff=ff)
+
+
+def init(cfg: ArchConfig, key) -> Any:
+    return init_from_decl(model_decl(cfg), key, DTYPES[cfg.dtype])
+
+
+def specs(cfg: ArchConfig) -> Any:
+    return specs_from_decl(model_decl(cfg), DTYPES[cfg.dtype])
+
+
+def pspecs(cfg: ArchConfig) -> Any:
+    return pspecs_from_decl(model_decl(cfg))
+
+
+# --------------------------------------------------------------------------
+# caches (decode state)
+# --------------------------------------------------------------------------
+
+def cache_decl(cfg: ArchConfig, batch: int, max_len: int,
+               batch_axes=("data",), model_size: int = 1) -> Any:
+    """Declaration tree for the decode cache (shapes + pspecs).
+
+    model_size drives divisibility-aware KV sharding: kv-heads shard over
+    `model` when they divide, else head_dim does (GQA kv=8 on a 16-way
+    axis).  batch==1 (long_500k) drops batch sharding and shards the
+    sequence over the batch axes instead (distributed-KV decode).
+    """
+    import functools
+    decl = functools.partial(_decl_zero)   # shadow: caches init to zeros
+    ba = tuple(batch_axes) if batch > 1 else None
+    seq_ax = None if batch > 1 else tuple(batch_axes)
+    kv_ok = cfg.n_kv_heads % max(model_size, 1) == 0
+    hd_ok = cfg.head_dim % max(model_size, 1) == 0
+    kv_ax, hd_ax = ("model", None) if kv_ok else \
+        ((None, "model") if hd_ok else (None, None))
+    kvshape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    kvspec = P(None, ba, seq_ax, kv_ax, hd_ax)
+    if cfg.family in ("dense", "vlm"):
+        return {"k": decl(kvshape, kvspec, None),
+                "v": decl(kvshape, kvspec, None)}
+    if cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_dense_layers
+        mk = (n_moe,) + kvshape[1:]
+        dk = (cfg.first_dense_layers,) + kvshape[1:]
+        out = {"k": decl(mk, kvspec, None), "v": decl(mk, kvspec, None)}
+        if cfg.first_dense_layers:
+            out = {"moe": out,
+                   "dense": {"k": decl(dk, kvspec, None),
+                             "v": decl(dk, kvspec, None)}}
+        return out
+    if cfg.family == "ssm":
+        di = cfg.d_inner
+        return {
+            "ssm": decl((cfg.n_layers, batch, di, cfg.ssm_state),
+                        P(None, ba, "model", None), None,
+                        dtype=jnp.float32),   # SSM state carries in f32
+            "conv": decl((cfg.n_layers, batch, cfg.conv_width - 1, di),
+                         P(None, ba, None, "model"), None),
+        }
+    if cfg.family == "hybrid":
+        k = cfg.hybrid_attn_every
+        g = cfg.n_layers // k
+        di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        hd = di // nh
+        gk = (g, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {
+            "ssm": decl((cfg.n_layers, batch, nh, hd, n),
+                        P(None, ba, "model", None, None), None,
+                        dtype=jnp.float32),
+            "conv": decl((cfg.n_layers, batch, cfg.conv_width - 1,
+                          di + 2 * n), P(None, ba, None, "model"), None),
+            "attn_k": decl(gk, kvspec, None),
+            "attn_v": decl(gk, kvspec, None),
+        }
+    if cfg.family == "encdec":
+        enc_len = max_len
+        xk = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": decl(kvshape, kvspec, None),
+                "v": decl(kvshape, kvspec, None),
+                "xk": decl(xk, kvspec, None),
+                "xv": decl(xk, kvspec, None)}
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg, batch, max_len, batch_axes=("data",), model_size=1):
+    return init_from_decl(
+        cache_decl(cfg, batch, max_len, batch_axes, model_size),
+        jax.random.PRNGKey(0), DTYPES[cfg.dtype])
+
+
+def cache_specs(cfg, batch, max_len, batch_axes=("data",), model_size=1):
+    return specs_from_decl(
+        cache_decl(cfg, batch, max_len, batch_axes, model_size),
+        DTYPES[cfg.dtype])
+
+
+def cache_pspecs(cfg, batch, max_len, batch_axes=("data",), model_size=1):
+    return pspecs_from_decl(
+        cache_decl(cfg, batch, max_len, batch_axes, model_size))
+
+
+# --------------------------------------------------------------------------
+# forward passes
+# --------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch):
+    """tokens (+ stub frontend embeddings) -> (B, S, D) activations."""
+    x = embed_lookup(params["embed"], batch["tokens"])
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)   # gemma-style scaling
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(x.dtype) @ params["projector"]
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(cfg: ArchConfig, params, batch, *, remat=True):
+    """Full-sequence forward -> logits (B, S, V_shardable)."""
+    x, aux = forward_hidden(cfg, params, batch, remat=remat)
+    logits = unembed(params["embed"], x, cap=cfg.logit_softcap,
+                     vocab=cfg.vocab_size)
+    return logits, aux
+
+
+def forward_hidden(cfg: ArchConfig, params, batch, *, remat=True):
+    """Full-sequence forward -> final-norm hidden states (B, S, D).
+
+    batch: {"tokens": (B, S)} + family extras
+    ("patches": (B, P, frontend_dim) for vlm;
+     "frames": (B, S_enc, frontend_dim) for encdec).
+    """
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    aux = jnp.float32(0)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        windows = jnp.asarray(cfg.layer_windows(s), jnp.int32)
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            dcfg = _with_ff(cfg, cfg.first_dense_d_ff or cfg.d_ff)
+            x, _, _ = tf.attn_stack(
+                dcfg, params["dense_layers"], x, positions,
+                windows[: cfg.first_dense_layers], kind="dense", remat=remat)
+            windows = windows[cfg.first_dense_layers:]
+        kind = "moe" if cfg.family == "moe" else "dense"
+        x, _, aux = tf.attn_stack(cfg, params["layers"], x, positions,
+                                  windows, kind=kind, remat=remat)
+    elif cfg.family == "ssm":
+        x, _ = tf.ssm_stack(cfg, params["layers"], x, remat=remat)
+    elif cfg.family == "hybrid":
+        x, _, _, _ = tf.hybrid_stack(cfg, params["layers"], x, positions,
+                                     remat=remat)
+    elif cfg.family == "encdec":
+        enc_x = batch["frames"].astype(x.dtype) @ params["enc_proj"]
+        enc_pos = jnp.arange(enc_x.shape[1])
+        enc_out = tf.encoder_stack(cfg, params["enc_layers"], enc_x, enc_pos,
+                                   remat=remat)
+        enc_out = rms_norm(enc_out, params["enc_norm"], cfg.norm_eps)
+        x, _ = tf.decoder_xattn_stack(cfg, params["layers"], x, positions,
+                                      enc_out, enc_pos, remat=remat)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def _chunked_ce(cfg, params, h, tgt):
+    """Cross entropy without materializing (T, V) logits.
+
+    Chunks the batch dimension and recomputes each chunk's logits in the
+    backward pass (jax.checkpoint): peak loss memory falls from
+    O(T·V·(2B bf16 + 4B f32)) to O(T·V/nb).  Chunks stride across the
+    data-sharded batch (reshape + transpose) so every step keeps all
+    shards busy.
+    """
+    b, s, d = h.shape
+    nb = 1
+    for cand in (16, 8, 4, 2):
+        if b % cand == 0 and b // cand >= cand:
+            nb = cand
+            break
+
+    @jax.checkpoint
+    def chunk(carry, xs):
+        hc, tc = xs                         # (b/nb, s, D), (b/nb, s)
+        lg = unembed(params["embed"], hc, cap=cfg.logit_softcap,
+                     vocab=cfg.vocab_size).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        true = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - true), None
+
+    if nb == 1:
+        total, _ = chunk(jnp.float32(0), (h, tgt))
+    else:
+        hb = h.reshape(b // nb, nb, s, d).transpose(1, 0, 2, 3)
+        tb = tgt.reshape(b // nb, nb, s).transpose(1, 0, 2)
+        total, _ = jax.lax.scan(chunk, jnp.float32(0), (hb, tb))
+    return total / (b * s)
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, aux_weight=0.01, remat=True):
+    """Next-token cross entropy (f32 logsumexp, chunked) + MoE aux loss."""
+    hidden, aux = forward_hidden(cfg, params, batch, remat=remat)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":   # text tail only
+        hidden = hidden[:, -tokens.shape[1]:]
+    loss = _chunked_ce(cfg, params, hidden[:, :-1], tokens[:, 1:])
+    return loss + aux_weight * aux
+
+
+def prefill(cfg: ArchConfig, params, batch, cache, *, remat=True):
+    """Populate the decode cache from a full prompt; returns
+    (last-token logits, cache)."""
+    x = _embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    pos0 = jnp.int32(0)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        windows = jnp.asarray(cfg.layer_windows(s), jnp.int32)
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            dcfg = _with_ff(cfg, cfg.first_dense_d_ff or cfg.d_ff)
+            x, dcache, _ = tf.attn_stack(
+                dcfg, params["dense_layers"], x, positions,
+                windows[: cfg.first_dense_layers], kind="dense",
+                cache=cache["dense"], cache_pos=pos0, remat=remat)
+            x, mcache, _ = tf.attn_stack(
+                cfg, params["layers"], x, positions,
+                windows[cfg.first_dense_layers:], kind="moe",
+                cache=cache["moe"], cache_pos=pos0, remat=remat)
+            new_cache = {"dense": dcache, "moe": mcache}
+        else:
+            kind = "moe" if cfg.family == "moe" else "dense"
+            x, new_cache, _ = tf.attn_stack(cfg, params["layers"], x,
+                                            positions, windows, kind=kind,
+                                            cache=cache, cache_pos=pos0,
+                                            remat=remat)
+    elif cfg.family == "ssm":
+        x, new_cache = tf.ssm_stack(cfg, params["layers"], x, states=cache,
+                                    remat=remat)
+    elif cfg.family == "hybrid":
+        st = {"ssm": cache["ssm"], "conv": cache["conv"]}
+        kvc = {"k": cache["attn_k"], "v": cache["attn_v"]}
+        x, nst, nkv, ntail = tf.hybrid_stack(
+            cfg, params["layers"], x, positions, states=st, cache=kvc,
+            cache_pos=pos0, remat=remat)
+        new_cache = _merge_hybrid_cache(cfg, nst, nkv, ntail)
+    elif cfg.family == "encdec":
+        enc_x = batch["frames"].astype(x.dtype) @ params["enc_proj"]
+        enc_pos = jnp.arange(enc_x.shape[1])
+        enc_out = tf.encoder_stack(cfg, params["enc_layers"], enc_x, enc_pos,
+                                   remat=remat)
+        enc_out = rms_norm(enc_out, params["enc_norm"], cfg.norm_eps)
+        x, new_cache = tf.decoder_xattn_stack(
+            cfg, params["layers"], x, positions, enc_out, enc_pos,
+            cache=cache, cache_pos=pos0, remat=remat)
+
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cap=cfg.logit_softcap,
+                     vocab=cfg.vocab_size)
+    return logits, new_cache
+
+
+def _merge_hybrid_cache(cfg, nst, nkv, ntail):
+    k = cfg.hybrid_attn_every
+    g = cfg.n_layers // k
+    tail = cfg.n_layers - g * k
+
+    def flatten_groups(t):
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape((g * k,) + a.shape[2:]), t)
+
+    st = flatten_groups(nst)
+    if tail:
+        st = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), st, ntail)
+    return {"ssm": st["ssm"], "conv": st["conv"],
+            "attn_k": nkv["k"], "attn_v": nkv["v"]}
+
+
+def decode_step(cfg: ArchConfig, params, tokens, cache, pos, *, remat=False):
+    """One-token decode.  tokens: (B, 1); pos: () int32 write offset.
+    Returns (logits (B, 1, V), new cache)."""
+    x = embed_lookup(params["embed"], tokens)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = pos + jnp.arange(1)
+    big = jnp.int32(2 ** 30)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe" and cfg.first_dense_layers:
+            dcfg = _with_ff(cfg, cfg.first_dense_d_ff or cfg.d_ff)
+            wd = _decode_windows(cfg, cache["dense"]["k"].shape[2])
+            x, dcache, _ = tf.attn_stack(
+                dcfg, params["dense_layers"], x, positions,
+                wd[: cfg.first_dense_layers], kind="dense",
+                cache=cache["dense"], cache_pos=pos, remat=remat)
+            x, mcache, _ = tf.attn_stack(
+                cfg, params["layers"], x, positions,
+                wd[cfg.first_dense_layers:], kind="moe", cache=cache["moe"],
+                cache_pos=pos, remat=remat)
+            new_cache = {"dense": dcache, "moe": mcache}
+        else:
+            kind = "moe" if cfg.family == "moe" else "dense"
+            windows = _decode_windows(cfg, cache["k"].shape[2])
+            x, new_cache, _ = tf.attn_stack(cfg, params["layers"], x,
+                                            positions, windows, kind=kind,
+                                            cache=cache, cache_pos=pos,
+                                            remat=remat)
+    elif cfg.family == "ssm":
+        x, new_cache = tf.ssm_stack(cfg, params["layers"], x, states=cache,
+                                    remat=remat)
+    elif cfg.family == "hybrid":
+        st = {"ssm": cache["ssm"], "conv": cache["conv"]}
+        kvc = {"k": cache["attn_k"], "v": cache["attn_v"]}
+        x, nst, nkv, ntail = tf.hybrid_stack(
+            cfg, params["layers"], x, positions, states=st, cache=kvc,
+            cache_pos=pos, remat=remat)
+        new_cache = _merge_hybrid_cache(cfg, nst, nkv, ntail)
+    elif cfg.family == "encdec":
+        enc_pos = jnp.arange(cache["xk"].shape[2])
+        x, new_cache = tf.decoder_xattn_stack(
+            cfg, params["layers"], x, positions, None, enc_pos,
+            cache=cache, cache_pos=pos, remat=remat)
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cap=cfg.logit_softcap,
+                     vocab=cfg.vocab_size)
+    return logits, new_cache
+
+
+def _decode_windows(cfg, max_len):
+    return jnp.asarray(cfg.layer_windows(max_len), jnp.int32)

@@ -1,0 +1,202 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+TPU adaptation of the CUDA selective-scan: the recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t        (diagonal A)
+    y_t = <C_t, h_t>
+
+expands state to d_inner × N per token; the GPU kernel keeps h in shared
+memory so it never touches HBM.  The JAX port gets the same property by
+*fusing the output contraction into a chunked scan*: a sequential
+``lax.scan`` over chunks carries only the (B, ..., N) boundary state,
+and inside each chunk a log-depth ``lax.associative_scan`` materializes
+h for `chunk` positions only, immediately contracts with C, and frees
+it.  Peak state memory is (B, chunk, d_inner, N) — VMEM-sized by
+choosing `chunk`, never (B, S, d_inner, N) (DESIGN.md §3).
+
+Mamba-2 uses the same recurrence with scalar-per-head A and head-shared
+B/C (the SSD matmul form is a recorded hillclimb candidate, not a
+correctness requirement).  Decode is the O(1) single-step update through
+the identical code path (S=1, chunk=1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import decl, maybe_shard
+
+
+def _assoc(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, b1 * a2 + b2
+
+
+def fused_ssm_scan(dt, a, bmat, cmat, x, h0, chunk, variant):
+    """Chunked selective scan with fused output contraction.
+
+    mamba1: dt (B,S,Di), a (Di,N), bmat/cmat (B,S,N), x (B,S,Di),
+            h (B,Di,N)  -> y (B,S,Di)
+    mamba2: dt (B,S,nh), a (nh,), bmat/cmat (B,S,N), x (B,S,nh,hd),
+            h (B,nh,hd,N) -> y (B,S,nh,hd)
+    """
+    bsz, s = dt.shape[0], dt.shape[1]
+    chunk = min(chunk, s)
+    while s % chunk:          # ragged prompts: largest divisor ≤ requested
+        chunk -= 1
+    n_chunks = s // chunk
+
+    def split(t):  # (B, S, ...) -> (n_chunks, B, chunk, ...)
+        t = t.reshape((bsz, n_chunks, chunk) + t.shape[2:])
+        return t.transpose((1, 0, 2) + tuple(range(3, t.ndim)))
+
+    dt_c, b_c, c_c, x_c = split(dt), split(bmat), split(cmat), split(x)
+
+    @jax.checkpoint
+    def step(h, inputs):
+        # checkpointed: backward recomputes the chunk's (B, chunk, ..., N)
+        # expanded-state tensors instead of stashing them for every chunk —
+        # the same memory contract as the fused CUDA scan (h never hits
+        # HBM at full sequence length).
+        dtc, bc, cc, xc = inputs            # (B, chunk, ...)
+        dtc = dtc.astype(jnp.float32)
+        if variant == "mamba1":
+            da = jnp.exp(dtc[..., None] * a)                     # (B,c,Di,N)
+            db = (dtc * xc.astype(jnp.float32))[..., None] \
+                * bc[:, :, None, :].astype(jnp.float32)          # (B,c,Di,N)
+        else:  # mamba2
+            da = jnp.exp(dtc * a)[..., None, None]               # (B,c,nh,1,1)
+            db = (dtc[..., None, None] * xc.astype(jnp.float32)[..., None]
+                  * bc[:, :, None, None, :].astype(jnp.float32)) # (B,c,nh,hd,N)
+            da = jnp.broadcast_to(da, db.shape)
+        aa, bb = jax.lax.associative_scan(_assoc, (da, db), axis=1)
+        h_all = aa * h[:, None] + bb        # (B, chunk, ..., N)
+        if variant == "mamba1":
+            y = jnp.einsum("bcdn,bcn->bcd", h_all,
+                           cc.astype(jnp.float32))
+        else:
+            y = jnp.einsum("bchdn,bcn->bchd", h_all,
+                           cc.astype(jnp.float32))
+        return h_all[:, -1], y
+
+    h_last, y_chunks = jax.lax.scan(step, h0, (dt_c, b_c, c_c, x_c))
+    y = y_chunks.transpose((1, 0, 2) + tuple(range(3, y_chunks.ndim)))
+    return y.reshape((bsz, s) + y.shape[3:]), h_last
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv as W shifted multiply-adds.
+
+    x: (B, S, D); w: (D, W); state: (B, W-1, D) decode carry.
+    Avoids the (B, S, W, D) window gather — the gather's backward is a
+    scatter-add that XLA accumulates through a full-sequence buffer; the
+    shift-and-add form is pure slices + FMAs with an equally cheap
+    transpose.  Returns (y, new_state).
+    """
+    bsz, s, d = x.shape
+    width = w.shape[1]
+    pad = jnp.zeros((bsz, width - 1, d), x.dtype) if state is None else state
+    xp = jnp.concatenate([pad.astype(x.dtype), x], axis=1)  # (B, S+W-1, D)
+    w = w.astype(x.dtype)
+    y = xp[:, width - 1: width - 1 + s, :] * w[:, width - 1]
+    for j in range(width - 1):
+        y = y + xp[:, j: j + s, :] * w[:, j]
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y, new_state
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 block (falcon-mamba)
+# --------------------------------------------------------------------------
+
+def mamba1_decl(cfg):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    return {
+        "in_proj": decl((d, 2 * di), P(None, "model"), 1.0),
+        "conv_w": decl((di, cfg.conv_width), P("model", None), 1.0),
+        "x_proj": decl((di, dt_rank + 2 * n), P("model", None), 1.0),
+        "dt_proj": decl((dt_rank, di), P(None, "model"), 1.0),
+        "a_log": decl((di, n), P("model", None), None),
+        "d_skip": decl((di,), P("model"), None),
+        "out_proj": decl((di, d), P("model", None), 1.0),
+    }
+
+
+def mamba1_block(params, x, cfg, ssm_state=None, conv_state=None):
+    """x: (B, S, D).  ssm_state: (B, Di, N) decode carry.
+
+    Returns (y, new_ssm_state, new_conv_state).
+    """
+    bsz, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = max(d // 16, 1)
+    xz = x @ params["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)                   # (B, S, Di)
+    xi, new_conv = causal_conv1d(xi, params["conv_w"], conv_state)
+    xi = jax.nn.silu(xi)
+    proj = xi @ params["x_proj"].astype(xi.dtype)       # (B, S, dt_rank+2N)
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"])        # (B, S, Di)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))   # (Di, N)
+
+    h0 = (ssm_state if ssm_state is not None
+          else jnp.zeros((bsz, di, n), jnp.float32))
+    y, h_last = fused_ssm_scan(dt, a, bmat, cmat, xi, h0, cfg.ssm_chunk,
+                               "mamba1")
+    y = y.astype(x.dtype) + params["d_skip"] * xi
+    y = y * jax.nn.silu(z)
+    return y @ params["out_proj"], h_last, new_conv
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 block (zamba2): scalar-per-head A, head-shared B/C
+# --------------------------------------------------------------------------
+
+def mamba2_decl(cfg):
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = cfg.ssm_heads
+    return {
+        "in_proj": decl((d, 2 * di + 2 * n + nh), P(None, "model"), 1.0),
+        "conv_w": decl((di + 2 * n, cfg.conv_width), P("model", None), 1.0),
+        "a_log": decl((nh,), P(None), None),
+        "d_skip": decl((nh,), P(None), None),
+        "norm_g": decl((di,), P("model"), None),
+        "out_proj": decl((di, d), P("model", None), 1.0),
+    }
+
+
+def mamba2_block(params, x, cfg, ssm_state=None, conv_state=None):
+    """x: (B, S, D).  ssm_state: (B, nh, hd, N)."""
+    bsz, s, d = x.shape
+    di, n, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = di // nh
+    zxbcdt = x @ params["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    xbc, new_conv = causal_conv1d(xbc, params["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xi, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt)                             # (B, S, nh)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))    # (nh,)
+
+    xh = xi.reshape(bsz, s, nh, hd)
+    # GSPMD does not propagate the d_inner sharding through the
+    # (B,S,Di)->(B,S,nh,hd) reshape here; without the explicit constraint
+    # the (B, chunk, nh, hd, N) expanded-state tensors replicate across
+    # the model axis (observed 16× blowup on zamba2 train).
+    xh = maybe_shard(xh, P(("pod", "data"), None, "model", None))
+    dt = maybe_shard(dt, P(("pod", "data"), None, "model"))
+    h0 = (ssm_state if ssm_state is not None
+          else jnp.zeros((bsz, nh, hd, n), jnp.float32))
+    h0 = maybe_shard(h0, P(("pod", "data"), "model", None, None))
+    y, h_last = fused_ssm_scan(dt, a, bmat, cmat, xh, h0, cfg.ssm_chunk,
+                               "mamba2")
+    y = y.astype(x.dtype) + params["d_skip"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, di)
+    # gated RMSNorm (mamba2's norm-before-out)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + cfg.norm_eps)
+         ).astype(x.dtype) * params["norm_g"] * jax.nn.silu(z)
+    return y @ params["out_proj"], h_last, new_conv

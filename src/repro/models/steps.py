@@ -1,0 +1,55 @@
+"""Jit-able train / serve steps — the units the launcher and dry-run lower.
+
+``make_train_step(cfg)``   -> step(params, opt_state, batch) ->
+                              (params, opt_state, metrics)
+``make_prefill_step(cfg)`` -> step(params, batch, cache) -> (logits, cache)
+``make_decode_step(cfg)``  -> step(params, tokens, cache, pos) ->
+                              (logits, cache)
+
+The functions close over the (hashable, frozen) ArchConfig so jit caches
+per architecture; all array state is explicit.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig | None = None,
+                    *, remat: bool = True):
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch, remat=remat))(params)
+        params, opt_state, metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return step
+
+
+def make_eval_step(cfg: ArchConfig, *, remat: bool = True):
+    def step(params, batch):
+        return M.loss_fn(cfg, params, batch, remat=remat)
+    return step
+
+
+def make_prefill_step(cfg: ArchConfig, *, remat: bool = True):
+    def step(params, batch, cache):
+        return M.prefill(cfg, params, batch, cache, remat=remat)
+    return step
+
+
+def make_decode_step(cfg: ArchConfig):
+    def step(params, tokens, cache, pos):
+        return M.decode_step(cfg, params, tokens, cache, pos)
+    return step

@@ -1,0 +1,313 @@
+"""Layer stacks: dense / MoE / SSM / hybrid decoders and the enc-dec pair.
+
+All homogeneous stacks are `lax.scan`s over layer-stacked params (bounded
+HLO size at 62+ layers) with `jax.checkpoint` around the block body
+(remat).  Heterogeneity is data, not structure:
+
+  * local/global attention alternation -> per-layer `window` array
+    scanned alongside params (gemma2 1:1, gemma3 5:1),
+  * MoE leading dense layers -> a second, separate scan,
+  * zamba2's *shared* attention block -> closed-over (unscanned) params
+    applied every `hybrid_attn_every` mamba layers via an outer scan over
+    groups.
+
+KV / SSM caches are scan xs/ys with a leading layer axis.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (attn_decl, attention_block,
+                                    best_attention, dense_attention)
+from repro.models.layers import (decl, gated_mlp, gated_mlp_decl, rms_norm,
+                                 shard_residual, stack_decl)
+from repro.models.moe import moe_decl, moe_layer
+from jax.sharding import PartitionSpec as P
+
+
+# --------------------------------------------------------------------------
+# per-layer declarations
+# --------------------------------------------------------------------------
+
+def dense_block_decl(cfg):
+    return {
+        "ln1": decl((cfg.d_model,), P(None), None),
+        "attn": attn_decl(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim),
+        "ln2": decl((cfg.d_model,), P(None), None),
+        "mlp": gated_mlp_decl(cfg.d_model, cfg.d_ff),
+    }
+
+
+def moe_block_decl(cfg):
+    return {
+        "ln1": decl((cfg.d_model,), P(None), None),
+        "attn": attn_decl(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim),
+        "ln2": decl((cfg.d_model,), P(None), None),
+        "moe": moe_decl(cfg),
+    }
+
+
+def ssm_block_decl(cfg):
+    block = (ssm_mod.mamba1_decl if cfg.ssm_variant == "mamba1"
+             else ssm_mod.mamba2_decl)
+    return {"ln": decl((cfg.d_model,), P(None), None), "mixer": block(cfg)}
+
+
+def enc_block_decl(cfg):
+    return dense_block_decl(cfg)
+
+
+def dec_block_decl(cfg):
+    d = dense_block_decl(cfg)
+    d["ln_x"] = decl((cfg.d_model,), P(None), None)
+    d["xattn"] = attn_decl(cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                           cfg.head_dim)
+    return d
+
+
+# --------------------------------------------------------------------------
+# block applications
+# --------------------------------------------------------------------------
+
+def _apply_attn_block(p, x, positions, cfg, window, cache, cache_pos,
+                      ffn_fn):
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, new_cache = attention_block(p["attn"], h, positions, cfg=cfg,
+                                   window=window, kv_cache=cache,
+                                   cache_pos=cache_pos)
+    x = x + a
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = ffn_fn(p, h)
+    return shard_residual(x + y), new_cache, aux
+
+
+def _dense_ffn(cfg):
+    def fn(p, h):
+        return gated_mlp(p["mlp"], h, cfg.mlp), jnp.float32(0)
+    return fn
+
+
+def _moe_ffn(cfg):
+    def fn(p, h):
+        return moe_layer(p["moe"], h, cfg, mlp_kind=cfg.mlp)
+    return fn
+
+
+# --------------------------------------------------------------------------
+# decoder stacks
+# --------------------------------------------------------------------------
+
+def _scan_blocks(body, x, xs, n, remat=True):
+    body = jax.checkpoint(body) if remat else body
+    return jax.lax.scan(body, x, xs, length=n)
+
+
+def attn_stack(cfg, params, x, positions, windows, *, kind,
+               cache=None, cache_pos=None, remat=True):
+    """Scan a stacked dense or MoE decoder.  Returns (x, new_cache, aux).
+
+    params: stacked block tree (leading layer axis).
+    windows: (L,) int32 per-layer attention window.
+    cache: dict(k=(L,B,Smax,KV,Dh), v=...) or None.
+    """
+    ffn = _dense_ffn(cfg) if kind == "dense" else _moe_ffn(cfg)
+    has_cache = cache is not None
+
+    def body(carry, xs_i):
+        xc, aux = carry
+        if has_cache:
+            p, w, c = xs_i
+        else:
+            p, w = xs_i
+            c = None
+        xc, new_c, a = _apply_attn_block(p, xc, positions, cfg, w, c,
+                                         cache_pos, ffn)
+        return (xc, aux + a), new_c
+
+    xs = (params, windows, cache) if has_cache else (params, windows)
+    (x, aux), new_cache = _scan_blocks(body, (x, jnp.float32(0)), xs,
+                                       windows.shape[0], remat)
+    return x, (new_cache if has_cache else None), aux
+
+
+def ssm_stack(cfg, params, x, *, states=None, remat=True):
+    """Scan a stacked mamba decoder.  states: dict(ssm=(L,B,...),
+    conv=(L,B,W-1,Dc)) or None.  Returns (x, new_states)."""
+    block = (ssm_mod.mamba1_block if cfg.ssm_variant == "mamba1"
+             else ssm_mod.mamba2_block)
+    has_state = states is not None
+
+    def body(xc, xs_i):
+        if has_state:
+            p, st = xs_i
+            s_in, c_in = st["ssm"], st["conv"]
+        else:
+            p = xs_i
+            s_in = c_in = None
+        h = rms_norm(xc, p["ln"], cfg.norm_eps)
+        y, s_out, c_out = block(p["mixer"], h, cfg, s_in, c_in)
+        return shard_residual(xc + y), {"ssm": s_out, "conv": c_out}
+
+    xs = (params, states) if has_state else params
+    x, new_states = _scan_blocks(body, x, xs, cfg.n_layers, remat)
+    return x, (new_states if has_state else None)
+
+
+def hybrid_stack(cfg, params, x, positions, *, states=None, cache=None,
+                 cache_pos=None, remat=True):
+    """zamba2: groups of `hybrid_attn_every` mamba2 blocks + ONE shared
+    attention block (same weights every group), leftover mamba blocks last.
+
+    params: {"mamba": stacked (n_layers), "mamba_tail": stacked (leftover),
+             "shared_attn": unstacked dense block}
+    cache: per-group KV cache for the shared block (G,B,Smax,KV,Dh).
+    """
+    k = cfg.hybrid_attn_every
+    n_groups = cfg.n_layers // k
+    tail = cfg.n_layers - n_groups * k
+    has_state = states is not None
+    ffn = _dense_ffn(cfg)
+
+    def mamba_body(xc, xs_i):
+        if has_state:
+            p, st = xs_i
+            s_in, c_in = st["ssm"], st["conv"]
+        else:
+            p = xs_i
+            s_in = c_in = None
+        h = rms_norm(xc, p["ln"], cfg.norm_eps)
+        y, s_out, c_out = ssm_mod.mamba2_block(p["mixer"], h, cfg, s_in, c_in)
+        return shard_residual(xc + y), {"ssm": s_out, "conv": c_out}
+
+    def group_body(carry, xs_i):
+        xc = carry
+        if has_state:
+            pg, stg, cg = xs_i
+            inner_xs = (pg, stg)
+        else:
+            pg, cg = xs_i if cache is not None else (xs_i, None)
+            inner_xs = pg
+        xc, new_st = _scan_blocks(mamba_body, xc, inner_xs, k, remat)
+        xc, new_cache, _ = _apply_attn_block(
+            params["shared_attn"], xc, positions, cfg,
+            jnp.int32(positions.shape[-1] if cache is None else 2 ** 30),
+            cg, cache_pos, ffn)
+        return xc, (new_st, new_cache)
+
+    def regroup(t):  # (n_groups*k, ...) -> (n_groups, k, ...)
+        return jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, k) + a.shape[1:]), t)
+
+    main = jax.tree_util.tree_map(lambda a: a[: n_groups * k],
+                                  params["mamba"])
+    if has_state:
+        st_main = jax.tree_util.tree_map(lambda a: a[: n_groups * k], states)
+        xs = (regroup(main), regroup(st_main), cache)
+    elif cache is not None:
+        xs = (regroup(main), cache)
+    else:
+        xs = regroup(main)
+    x, (new_states, new_cache) = jax.lax.scan(group_body, x, xs,
+                                              length=n_groups)
+
+    new_tail = None
+    if tail:
+        tail_p = jax.tree_util.tree_map(lambda a: a[n_groups * k:],
+                                        params["mamba"])
+        if has_state:
+            st_tail = jax.tree_util.tree_map(lambda a: a[n_groups * k:],
+                                             states)
+            x, new_tail = _scan_blocks(mamba_body, x, (tail_p, st_tail),
+                                       tail, remat)
+        else:
+            x, _ = _scan_blocks(mamba_body, x, tail_p, tail, remat)
+    return x, new_states, new_cache, new_tail
+
+
+def encoder_stack(cfg, params, x, positions, remat=True):
+    """Bidirectional encoder (no mask beyond padding; full window)."""
+    ffn = _dense_ffn(cfg)
+
+    def body(carry, p):
+        xc, _ = carry
+        h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+        a, _ = _noncausal_self_attn(p["attn"], h, positions, cfg)
+        xc = xc + a
+        h = rms_norm(xc, p["ln2"], cfg.norm_eps)
+        y, _ = ffn(p, h)
+        return (shard_residual(xc + y), jnp.float32(0)), None
+
+    (x, _), _ = _scan_blocks(body, (x, jnp.float32(0)), params,
+                             cfg.n_enc_layers, remat)
+    return x
+
+
+def _noncausal_self_attn(p, x, positions, cfg):
+    from repro.models.layers import rope
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = rope((x @ p["wq"]).reshape(b, s, h, dh), positions, cfg.rope_theta)
+    k = rope((x @ p["wk"]).reshape(b, s, kv, dh), positions, cfg.rope_theta)
+    v = (x @ p["wv"]).reshape(b, s, kv, dh)
+    o = best_attention(q, k, v, positions, positions,
+                       window=jnp.int32(2 ** 30), causal=False,
+                       attn_softcap=cfg.attn_softcap)
+    return o.reshape(b, s, h * dh) @ p["wo"], None
+
+
+def decoder_xattn_stack(cfg, params, x, positions, enc_out, enc_positions,
+                        *, cache=None, cache_pos=None, remat=True):
+    """Enc-dec decoder: causal self-attn + cross-attn + MLP per layer.
+
+    cache: dict(k=, v= (self), xk=, xv= (cross, precomputed)) stacked.
+    """
+    ffn = _dense_ffn(cfg)
+    h_, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    has_cache = cache is not None
+
+    def body(carry, xs_i):
+        xc = carry
+        if has_cache:
+            p, c = xs_i
+            self_cache = {"k": c["k"], "v": c["v"]}
+        else:
+            p, c = xs_i, None
+            self_cache = None
+        h = rms_norm(xc, p["ln1"], cfg.norm_eps)
+        a, new_self = attention_block(
+            p["attn"], h, positions, cfg=cfg,
+            window=jnp.int32(2 ** 30), kv_cache=self_cache,
+            cache_pos=cache_pos)
+        xc = xc + a
+        # cross attention (no rope; encoder output as kv).  When enc_out is
+        # available (train / prefill) the cross-KV is computed fresh and —
+        # if a cache exists — stored; at decode it is read back.
+        h = rms_norm(xc, p["ln_x"], cfg.norm_eps)
+        b, s, _ = h.shape
+        q = (h @ p["xattn"]["wq"]).reshape(b, s, h_, dh)
+        if enc_out is not None:
+            se = enc_out.shape[1]
+            ck = (enc_out @ p["xattn"]["wk"]).reshape(b, se, kv, dh)
+            cv = (enc_out @ p["xattn"]["wv"]).reshape(b, se, kv, dh)
+        else:
+            ck, cv = c["xk"], c["xv"]
+        o = best_attention(q, ck, cv, positions, enc_positions,
+                           window=jnp.int32(2 ** 30), causal=False,
+                           attn_softcap=cfg.attn_softcap)
+        xc = xc + o.reshape(b, s, h_ * dh) @ p["xattn"]["wo"]
+        h = rms_norm(xc, p["ln2"], cfg.norm_eps)
+        y, _ = ffn(p, h)
+        new_c = (dict(new_self, xk=ck, xv=cv) if has_cache else None)
+        return shard_residual(xc + y), new_c
+
+    xs = (params, cache) if has_cache else params
+    body_ = jax.checkpoint(body) if remat else body
+    x, new_cache = jax.lax.scan(body_, x, xs, length=cfg.n_layers)
+    return x, (new_cache if has_cache else None)

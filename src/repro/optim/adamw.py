@@ -1,0 +1,136 @@
+"""AdamW with ZeRO-1-style sharded optimizer states + cosine schedule.
+
+Functional (init/update) with f32 moments regardless of param dtype.
+``zero1_pspecs`` derives optimizer-state partition specs from the param
+specs: each moment tensor additionally shards its largest replicated
+axis over the `data` mesh axis (optimizer-state memory / `data`), the
+standard ZeRO-1 layout.  Under pjit the resharding collectives are
+inserted by XLA at the param-update boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+    # memory-reduced moments: bf16 halves optimizer HBM (arctic-480b needs
+    # this to fit a single 256-chip pod; see EXPERIMENTS.md §Dry-run)
+    moment_dtype: str = "float32"
+
+
+def schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup) /
+                 jnp.maximum(cfg.total_steps - cfg.warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return AdamWState(mu=zeros,
+                      nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                      step=jnp.int32(0))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def core(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + \
+            cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(mdt), v.astype(mdt))
+
+    def upd(p, g, m, v):
+        # Layer-stacked leaves update one layer per loop step so the f32
+        # staging copies are 1/n_layers-sized.  fori_loop + in-place
+        # dynamic updates (not lax.map): map's whole-stack xs lets XLA
+        # hoist the f32 converts back out of the loop, recreating the
+        # full-stack copies (observed on arctic-480b).
+        if p.ndim >= 3 and p.shape[0] >= 8:
+            # g rides in the carry (unmodified) so XLA cannot prove it
+            # loop-invariant and hoist a whole-stack f32 convert of it.
+            def body(i, carry):
+                cp, cm, cv, cg = carry
+                sl = lambda a: jax.lax.dynamic_index_in_dim(
+                    a, i, 0, keepdims=False)
+                p2, m2, v2 = core(sl(cp), sl(cg), sl(cm), sl(cv))
+                up = lambda a, x: jax.lax.dynamic_update_index_in_dim(
+                    a, x, i, 0)
+                return up(cp, p2), up(cm, m2), up(cv, v2), cg
+
+            out = jax.lax.fori_loop(0, p.shape[0], body, (p, m, v, g))
+            return out[0], out[1], out[2]
+        return core(p, g, m, v)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                   is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(new_m, new_v, step), metrics
+
+
+def zero1_pspecs(param_specs, param_pspecs, data_axis="data",
+                 data_size: int = 1):
+    """Optimizer-state pspecs: shard the largest replicated axis of each
+    moment over the data axis (ZeRO-1)."""
+
+    def one(sds, spec):
+        if spec is None:
+            spec = P()
+        flat = {a for e in spec if e is not None
+                for a in ((e,) if isinstance(e, str) else tuple(e))}
+        if data_axis in flat:      # already FSDP-sharded over data
+            return spec
+        axes = list(spec) + [None] * (len(sds.shape) - len(spec))
+        best, best_dim = -1, 0
+        for i, (ax, dim) in enumerate(zip(axes, sds.shape)):
+            if ax is None and dim % max(data_size, 1) == 0 and dim > best_dim:
+                best, best_dim = i, dim
+        if best >= 0 and data_size > 1:
+            axes[best] = data_axis
+        return P(*axes)
+
+    return jax.tree_util.tree_map(one, param_specs, param_pspecs)

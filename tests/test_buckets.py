@@ -1,0 +1,83 @@
+"""Catapult bucket (LRU shortcut table) semantics — §3.2 of the paper."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import buckets as bk
+
+
+def test_publish_and_lookup_roundtrip():
+    st8 = bk.make_buckets(8, 4)
+    h = jnp.asarray([1, 1, 3], jnp.int32)
+    d = jnp.asarray([10, 11, 12], jnp.int32)
+    t = jnp.full((3,), -1, jnp.int32)
+    st8 = bk.publish(st8, h, d, t)
+    ids, tags = bk.lookup(st8, jnp.asarray([1, 3, 0], jnp.int32))
+    assert set(np.asarray(ids[0])[np.asarray(ids[0]) >= 0].tolist()) == {10, 11}
+    assert 12 in np.asarray(ids[1]).tolist()
+    assert np.all(np.asarray(ids[2]) == -1)
+
+
+def test_lru_eviction_order():
+    state = bk.make_buckets(2, 3)
+    h = jnp.zeros((5,), jnp.int32)
+    d = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+    state = bk.publish(state, h, d, jnp.full((5,), -1, jnp.int32))
+    ids = np.asarray(bk.lookup(state, jnp.zeros((1,), jnp.int32))[0][0])
+    # capacity 3: oldest (1, 2) evicted, {3,4,5} retained
+    assert set(ids.tolist()) == {3, 4, 5}
+
+
+def test_duplicate_publish_refreshes_instead_of_evicting():
+    state = bk.make_buckets(2, 3)
+    h = jnp.zeros((3,), jnp.int32)
+    state = bk.publish(state, h, jnp.asarray([1, 2, 3], jnp.int32),
+                       jnp.full((3,), -1, jnp.int32))
+    # re-publish 1 (refresh), then add 4 -> 2 is now LRU and must go
+    state = bk.publish(state, jnp.zeros((2,), jnp.int32),
+                       jnp.asarray([1, 4], jnp.int32),
+                       jnp.full((2,), -1, jnp.int32))
+    ids = np.asarray(bk.lookup(state, jnp.zeros((1,), jnp.int32))[0][0])
+    assert set(ids.tolist()) == {1, 3, 4}
+
+
+def test_invalid_destination_is_skipped():
+    state = bk.make_buckets(2, 2)
+    state = bk.publish(state, jnp.zeros((1,), jnp.int32),
+                       jnp.asarray([-1], jnp.int32),
+                       jnp.full((1,), -1, jnp.int32))
+    assert np.all(np.asarray(state.ids) == -1)
+    assert int(state.step) == 0
+
+
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 99)),
+                min_size=1, max_size=64))
+@settings(max_examples=30, deadline=None)
+def test_matches_reference_lru(ops):
+    """Property: the fused scatter equals a python dict-of-LRU-lists."""
+    cap = 4
+    state = bk.make_buckets(8, cap)
+    ref: dict[int, list[int]] = {i: [] for i in range(8)}
+    h = jnp.asarray([o[0] for o in ops], jnp.int32)
+    d = jnp.asarray([o[1] for o in ops], jnp.int32)
+    state = bk.publish(state, h, d, jnp.full((len(ops),), -1, jnp.int32))
+    for hb, dd in ops:
+        row = ref[hb]
+        if dd in row:
+            row.remove(dd)      # refresh = move to MRU end
+        elif len(row) == cap:
+            row.pop(0)          # evict LRU
+        row.append(dd)
+    for b in range(8):
+        got = np.asarray(state.ids[b])
+        got = set(got[got >= 0].tolist())
+        assert got == set(ref[b]), (b, got, ref[b])
+
+
+def test_memory_cost_matches_paper():
+    """b=40, L=8 -> 40 KiB of id data (paper §3.2 'Negligible storage')."""
+    state = bk.make_buckets(2 ** 8, 40)
+    assert state.ids.size * 4 == 40 * 1024

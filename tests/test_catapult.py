@@ -1,0 +1,76 @@
+"""CatapultDB end-to-end invariants (paper §3.1–§3.3)."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import brute_force_knn, recall_at_k
+
+
+def test_recall_never_worse_than_diskann(diskann_engine, catapult_engine,
+                                         queries, ground_truth):
+    """§3.2 'Competitive recall': medoid fallback guarantees the baseline."""
+    ids_d, _, _ = diskann_engine.search(queries, k=10, beam_width=20)
+    for _ in range(3):
+        ids_c, _, _ = catapult_engine.search(queries, k=10, beam_width=20)
+    r_d = recall_at_k(ids_d, ground_truth)
+    r_c = recall_at_k(ids_c, ground_truth)
+    assert r_c >= r_d - 0.02, (r_c, r_d)
+
+
+def test_repeat_queries_use_catapults(catapult_engine, queries):
+    catapult_engine.search(queries, k=4, beam_width=8)
+    _, _, stats = catapult_engine.search(queries, k=4, beam_width=8)
+    assert stats.used.mean() > 0.9, "hot buckets must serve catapults"
+
+
+def test_catapults_reduce_traversal(diskann_engine, catapult_engine, queries):
+    """The headline mechanism: fewer hops + fewer distance computations."""
+    _, _, st_d = diskann_engine.search(queries, k=1, beam_width=4)
+    catapult_engine.search(queries, k=1, beam_width=4)   # warm buckets
+    _, _, st_c = catapult_engine.search(queries, k=1, beam_width=4)
+    assert st_c.hops.mean() < st_d.hops.mean()
+    assert st_c.ndists.mean() < st_d.ndists.mean()
+
+
+def test_cold_start_equals_diskann(corpus, queries):
+    """With empty buckets the starting set is exactly {medoid}."""
+    from tests.conftest import VPARAMS
+    from repro.core import VectorSearchEngine
+    eng_c = VectorSearchEngine(mode="catapult", vamana=VPARAMS).build(corpus[0])
+    eng_d = VectorSearchEngine(mode="diskann", vamana=VPARAMS).build(corpus[0])
+    ids_c, _, st_c = eng_c.search(queries, k=4, beam_width=8)
+    ids_d, _, st_d = eng_d.search(queries, k=4, beam_width=8)
+    np.testing.assert_array_equal(ids_c, ids_d)
+    np.testing.assert_array_equal(st_c.hops, st_d.hops)
+
+
+def test_serendipity_for_unseen_similar_queries(corpus, catapult_engine):
+    """§3.2: a *new* query hashing to a warm bucket still benefits."""
+    data, centers, _ = corpus
+    rng = np.random.default_rng(11)
+    idx = rng.integers(0, centers.shape[0], 64)
+    warm = (centers[idx] + 0.3 * rng.normal(size=(64, data.shape[1]))).astype(np.float32)
+    near = (warm + 0.05 * rng.normal(size=warm.shape)).astype(np.float32)
+    catapult_engine.search(warm, k=1, beam_width=4)
+    _, _, stats = catapult_engine.search(near, k=1, beam_width=4)
+    assert stats.used.mean() > 0.5
+
+
+def test_workload_shift_adapts(corpus):
+    """LRU eviction retires destinations of a stale workload (§3.2)."""
+    from tests.conftest import VPARAMS
+    from repro.core import VectorSearchEngine
+    data, centers, _ = corpus
+    eng = VectorSearchEngine(mode="catapult", vamana=VPARAMS,
+                             bucket_capacity=4).build(data)
+    rng = np.random.default_rng(13)
+    phase1 = (centers[:3][rng.integers(0, 3, 64)]
+              + 0.2 * rng.normal(size=(64, data.shape[1]))).astype(np.float32)
+    phase2 = (centers[9:][rng.integers(0, 3, 64)]
+              + 0.2 * rng.normal(size=(64, data.shape[1]))).astype(np.float32)
+    for _ in range(2):
+        eng.search(phase1, k=1, beam_width=4)
+    for _ in range(3):
+        _, _, st2 = eng.search(phase2, k=1, beam_width=4)
+    assert st2.used.mean() > 0.8, "buckets must refresh to the new workload"

@@ -1,0 +1,88 @@
+"""The dry-run machinery itself, exercised in-process on one cheap cell
+(subprocess: the 512-device override must precede jax init) + unit tests
+for the HLO cost walker that feeds §Roofline."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+
+def test_dryrun_cell_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "gemma-2b",
+         "--shape", "decode_32k", "--out", "/tmp/_dryrun_test.json"],
+        env=env, capture_output=True, text=True, timeout=900,
+        cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert r.returncode == 0, r.stdout[-1500:] + r.stderr[-1500:]
+    assert "ok" in r.stdout and "fits=True" in r.stdout
+    import json
+    d = json.load(open("/tmp/_dryrun_test.json"))
+    assert d["chips"] == 256
+    rf = d["roofline"]
+    assert rf["flops"] > 0 and rf["coll_bytes"] >= 0
+    assert rf["dominant"] in ("compute", "memory", "collective")
+
+
+def test_hlo_walker_multiplies_trip_counts():
+    from repro.launch.hlo_walk import walk
+
+    def body(c, _):
+        return c @ c, None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y.sum()
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile().as_text()
+    out = walk(txt)
+    assert abs(out["dot_flops"] - 12 * 2 * 128 ** 3) / (12 * 2 * 128 ** 3) \
+        < 0.01
+
+
+def test_hlo_walker_nested_scans():
+    from repro.launch.hlo_walk import walk
+
+    def f(x):
+        def ob(c, _):
+            def ib(d, _):
+                return d @ d, None
+            d, _ = jax.lax.scan(ib, c, None, length=3)
+            return d, None
+        y, _ = jax.lax.scan(ob, x, None, length=5)
+        return y.sum()
+
+    txt = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((64, 64), jnp.float32)).compile().as_text()
+    out = walk(txt)
+    want = 15 * 2 * 64 ** 3
+    assert abs(out["dot_flops"] - want) / want < 0.01
+
+
+def test_roofline_terms_and_dominance():
+    from repro.launch.roofline import RooflineTerms
+    t = RooflineTerms(flops=1e15, hbm_bytes=1e12, coll_bytes=1e12,
+                      coll_breakdown={}, chips=256, model_flops=5e14)
+    assert t.t_compute > 0 and t.t_memory > 0 and t.t_collective > 0
+    assert t.dominant == "collective"   # 1e12/(256*50e9) > others
+    assert abs(t.useful_ratio - 0.5) < 1e-9
+
+
+def test_collective_bytes_parser():
+    from repro.launch.roofline import collective_bytes
+    hlo = """
+  %ag = f32[128,256]{1,0} all-gather(%x), dimensions={0}
+  %ar = bf16[64]{0} all-reduce(%y), to_apply=%sum
+  %dot = f32[8,8]{1,0} dot(%a, %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 256 * 4
+    assert out["all-reduce"] == 64 * 2
+    assert out["all-to-all"] == 0

@@ -1,0 +1,111 @@
+"""Filtered search (§3.4) and dynamic insertion (FreshVamana) behaviour."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (VamanaParams, VectorSearchEngine, brute_force_knn,
+                        recall_at_k)
+from tests.conftest import make_clustered
+
+VP = VamanaParams(max_degree=16, build_beam=32, batch=512)
+
+
+@pytest.fixture(scope="module")
+def labeled():
+    data, centers, assign = make_clustered(1200, 16, 8, seed=21)
+    labels = (assign % 4).astype(np.int32)
+    return data, labels
+
+
+@pytest.fixture(scope="module")
+def filtered_engines(labeled):
+    data, labels = labeled
+    cat = VectorSearchEngine(mode="catapult", vamana=VP).build(
+        data, labels=labels, n_labels=4)
+    dsk = VectorSearchEngine(mode="diskann", vamana=VP).build(
+        data, labels=labels, n_labels=4)
+    return cat, dsk
+
+
+def _filtered_queries(labeled, n=64, seed=5):
+    data, labels = labeled
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, data.shape[0], n)
+    q = (data[idx] + 0.1 * rng.normal(size=(n, data.shape[1]))).astype(np.float32)
+    return q, labels[idx].astype(np.int32)
+
+
+def test_filtered_results_satisfy_predicate(filtered_engines, labeled):
+    data, labels = labeled
+    cat, dsk = filtered_engines
+    q, fl = _filtered_queries(labeled)
+    for eng in (cat, dsk):
+        ids, _, _ = eng.search(q, k=5, beam_width=16, filter_labels=fl)
+        valid = ids >= 0
+        assert valid.any()
+        got = labels[np.maximum(ids, 0)]
+        assert np.all(got[valid] == np.broadcast_to(fl[:, None], ids.shape)[valid])
+
+
+def test_filtered_recall_reasonable(filtered_engines, labeled):
+    data, labels = labeled
+    cat, _ = filtered_engines
+    q, fl = _filtered_queries(labeled, seed=6)
+    truth = brute_force_knn(data, q, 5, labels=labels, filter_labels=fl)
+    for _ in range(2):
+        ids, _, _ = cat.search(q, k=5, beam_width=16, filter_labels=fl)
+    assert recall_at_k(ids, truth) > 0.85
+
+
+def test_catapult_respects_filter_on_destinations(filtered_engines, labeled):
+    """A catapult recorded for label A must not seed label-B queries (§3.4)."""
+    cat, _ = filtered_engines
+    q, fl = _filtered_queries(labeled, seed=7)
+    cat.search(q, k=3, beam_width=8, filter_labels=fl)
+    other = ((fl + 1) % 4).astype(np.int32)
+    ids, _, _ = cat.search(q, k=3, beam_width=8, filter_labels=other)
+    labels = labeled[1]
+    valid = ids >= 0
+    assert np.all(labels[np.maximum(ids, 0)][valid]
+                  == np.broadcast_to(other[:, None], ids.shape)[valid])
+
+
+def test_insert_makes_vectors_findable():
+    data, centers, _ = make_clustered(800, 16, 6, seed=31)
+    eng = VectorSearchEngine(mode="catapult", vamana=VP,
+                             capacity=1100).build(data)
+    rng = np.random.default_rng(32)
+    new = (centers[0] + 8.0 + 0.05 * rng.normal(size=(50, 16))).astype(np.float32)
+    eng.insert(new)
+    q = (new[:16] + 0.01 * rng.normal(size=(16, 16))).astype(np.float32)
+    for _ in range(2):
+        ids, dists, _ = eng.search(q, k=3, beam_width=16)
+    assert (ids[:, 0] >= 800).mean() > 0.9, "new region must be discoverable"
+
+
+def test_tombstoned_nodes_not_returned(corpus):
+    data = corpus[0]
+    eng = VectorSearchEngine(mode="diskann", vamana=VP).build(data)
+    q = data[:32] + 0.001
+    ids0, _, _ = eng.search(q, k=1, beam_width=8)
+    eng.delete(ids0[:, 0])
+    ids1, _, _ = eng.search(q, k=3, beam_width=8)
+    assert not np.isin(ids1, ids0[:, 0]).any()
+
+
+def test_catapults_adapt_to_inserted_better_destinations():
+    """§3.2 'adaptivity to document insertions': after inserting better
+    candidates, the LRU refresh gradually repoints buckets at them."""
+    data, centers, _ = make_clustered(700, 16, 6, seed=41)
+    eng = VectorSearchEngine(mode="catapult", vamana=VP, bucket_capacity=4,
+                             capacity=1000).build(data)
+    rng = np.random.default_rng(42)
+    target = centers[2]
+    q = (target + 0.2 * rng.normal(size=(48, 16))).astype(np.float32)
+    eng.search(q, k=1, beam_width=4)
+    better = (target + 0.02 * rng.normal(size=(40, 16))).astype(np.float32)
+    eng.insert(better)
+    for _ in range(3):
+        ids, _, st = eng.search(q, k=1, beam_width=4)
+    assert (ids[:, 0] >= 700).mean() > 0.8

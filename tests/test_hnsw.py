@@ -1,0 +1,83 @@
+"""Index-agnosticism (paper §1/§3): catapults over the HNSW-style
+hierarchy, with the underlying search untouched."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import brute_force_knn, recall_at_k
+from repro.core.hnsw import HnswEngine, build_hnsw, descend, search
+from repro.core.beam_search import SearchSpec
+from repro.core.vamana import VamanaParams
+from tests.conftest import make_clustered
+
+VP = VamanaParams(max_degree=16, build_beam=32, batch=512)
+
+
+@pytest.fixture(scope="module")
+def corpus_h():
+    data, centers, _ = make_clustered(2000, 16, 12, seed=5)
+    return data, centers
+
+
+@pytest.fixture(scope="module")
+def hnsw_index(corpus_h):
+    return build_hnsw(corpus_h[0], VP, level_scale=8, seed=0)
+
+
+def test_hierarchy_structure(hnsw_index):
+    assert len(hnsw_index.level_ids) >= 1
+    sizes = [len(i) for i in hnsw_index.level_ids]
+    assert sizes == sorted(sizes, reverse=True), "levels must shrink"
+    # nesting: each level's ids ⊆ the level below
+    prev = np.arange(hnsw_index.base_adj.shape[0])
+    for ids in hnsw_index.level_ids:
+        assert set(ids.tolist()) <= set(prev.tolist())
+        prev = ids
+
+
+def test_descent_lands_near_query(corpus_h, hnsw_index):
+    import jax.numpy as jnp
+    data, centers = corpus_h
+    rng = np.random.default_rng(1)
+    q = (centers[rng.integers(0, 12, 32)]
+         + 0.3 * rng.normal(size=(32, 16))).astype(np.float32)
+    entries = np.asarray(descend(hnsw_index, jnp.asarray(q)))
+    d_entry = ((data[entries] - q) ** 2).sum(1)
+    d_top = ((data[hnsw_index.entry] - q) ** 2).sum(1)
+    assert d_entry.mean() < d_top.mean(), "descent must make progress"
+
+
+def test_hnsw_recall(corpus_h, hnsw_index):
+    import jax.numpy as jnp
+    data, centers = corpus_h
+    rng = np.random.default_rng(2)
+    q = (data[rng.integers(0, 2000, 64)]
+         + 0.05 * rng.normal(size=(64, 16))).astype(np.float32)
+    spec = SearchSpec(beam_width=16, k=5, max_iters=96)
+    res = search(hnsw_index, jnp.asarray(q), spec)
+    truth = brute_force_knn(data, q, 5)
+    assert recall_at_k(np.asarray(res.ids), truth) > 0.9
+
+
+def test_catapults_transparent_over_hnsw(corpus_h):
+    """The paper's headline over the second substrate: same search, same
+    results cold; fewer hops warm; recall never worse."""
+    data, centers = corpus_h
+    rng = np.random.default_rng(3)
+    q = (centers[rng.integers(0, 12, 96)]
+         + 0.3 * rng.normal(size=(96, 16))).astype(np.float32)
+    plain = HnswEngine(mode="plain", seed=0).build(data, VP)
+    cat = HnswEngine(mode="catapult", seed=0).build(data, VP)
+
+    ids_p, _, st_p = plain.search(q, k=3, beam_width=4)
+    ids_c0, _, st_c0 = cat.search(q, k=3, beam_width=4)
+    np.testing.assert_array_equal(ids_p, ids_c0)   # cold == plain
+
+    for _ in range(2):
+        ids_c, _, st_c = cat.search(q, k=3, beam_width=4)
+    truth = brute_force_knn(data, q, 3)
+    assert st_c["used"].mean() > 0.9
+    assert st_c["hops"].mean() <= st_p["hops"].mean()
+    assert st_c["ndists"].mean() < st_p["ndists"].mean()
+    assert recall_at_k(ids_c, truth) >= recall_at_k(ids_p, truth) - 0.02

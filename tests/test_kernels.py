@@ -1,0 +1,65 @@
+"""Per-kernel verification: shape/dtype sweeps against the pure-jnp oracles."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype=np.float32):
+    return jnp.asarray(RNG.normal(size=shape).astype(dtype))
+
+
+@pytest.mark.parametrize("b,c,d", [(8, 8, 16), (37, 203, 64), (128, 256, 128),
+                                   (1, 5, 768), (130, 127, 96)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_l2_distance(b, c, d, dtype):
+    q, x = _arr((b, d), dtype), _arr((c, d), dtype)
+    got = ops.l2_distance(q, x)
+    want = ref.l2_distance_ref(q, x)
+    tol = 1e-4 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("n,m,d", [(50, 8, 16), (500, 33, 64), (1000, 64, 128)])
+def test_gather_distance(n, m, d):
+    x = _arr((n, d))
+    ids = jnp.asarray(RNG.integers(-1, n, size=(m,)).astype(np.int32))
+    q = _arr((d,))
+    got = ops.gather_distance(x, ids, q)
+    want = ref.gather_distance_ref(x, ids, q)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    assert np.all(np.isinf(np.asarray(got)[np.asarray(ids) < 0]))
+
+
+@pytest.mark.parametrize("b,l,d", [(4, 4, 16), (100, 8, 64), (256, 16, 128)])
+def test_lsh_hash(b, l, d):
+    q, h = _arr((b, d)), _arr((l, d))
+    got = ops.lsh_hash(q, h)
+    want = ref.lsh_hash_ref(q, h)
+    np.testing.assert_array_equal(got, want)
+    assert np.asarray(got).max() < 2 ** l
+
+
+@pytest.mark.parametrize("m,k,c", [(4, 8, 16), (8, 256, 77), (16, 64, 128)])
+def test_pq_adc(m, k, c):
+    lut = jnp.asarray((RNG.normal(size=(m, k)) ** 2).astype(np.float32))
+    codes = jnp.asarray(RNG.integers(0, k, size=(c, m)).astype(np.int32))
+    got = ops.pq_adc(lut, codes)
+    want = ref.pq_adc_ref(lut, codes)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_l2_distance_agrees_with_beam_search_metric():
+    """Kernel and beam-search default dist_fn must be the same metric."""
+    from repro.core.beam_search import l2_dist_fn
+    x = _arr((40, 32))
+    q = _arr((32,))
+    ids = jnp.arange(40, dtype=jnp.int32)
+    np.testing.assert_allclose(l2_dist_fn(x)(q, ids),
+                               ops.l2_distance(q[None], x)[0],
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,53 @@
+"""Random-hyperplane LSH properties (paper §2.2) — hypothesis-driven."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import lsh
+
+
+@given(st.integers(1, 12), st.integers(2, 64), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_codes_in_range(n_bits, dim, seed):
+    params = lsh.make_lsh(jax.random.PRNGKey(seed), n_bits, dim)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (17, dim))
+    codes = np.asarray(lsh.hash_codes(params, q))
+    assert codes.min() >= 0 and codes.max() < 2 ** n_bits
+
+
+@given(st.floats(0.1, 100.0), st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_scale_invariance(scale, seed):
+    """The paper's reason for choosing this family: no calibration needed —
+    hashing is invariant to positive rescaling of the query."""
+    params = lsh.make_lsh(jax.random.PRNGKey(seed), 8, 24)
+    q = jax.random.normal(jax.random.PRNGKey(seed + 1), (33, 24))
+    a = np.asarray(lsh.hash_codes(params, q))
+    b = np.asarray(lsh.hash_codes(params, q * scale))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_locality_sensitive_collision_rates():
+    """P[collision] must be higher for near pairs than far pairs."""
+    key = jax.random.PRNGKey(0)
+    params = lsh.make_lsh(key, 8, 32)
+    base = jax.random.normal(jax.random.PRNGKey(1), (500, 32))
+    near = base + 0.05 * jax.random.normal(jax.random.PRNGKey(2), base.shape)
+    far = jax.random.normal(jax.random.PRNGKey(3), base.shape)
+    c0 = np.asarray(lsh.hash_codes(params, base))
+    p_near = (c0 == np.asarray(lsh.hash_codes(params, near))).mean()
+    p_far = (c0 == np.asarray(lsh.hash_codes(params, far))).mean()
+    assert p_near > 0.5
+    assert p_near > p_far + 0.3
+
+
+def test_bits_match_projection_signs():
+    params = lsh.make_lsh(jax.random.PRNGKey(5), 6, 10)
+    q = jax.random.normal(jax.random.PRNGKey(6), (20, 10))
+    bits = np.asarray(lsh.hash_bits(params, q))
+    proj = np.asarray(q @ params.hyperplanes.T)
+    np.testing.assert_array_equal(bits, (proj >= 0).astype(np.int32))

@@ -1,0 +1,127 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-grad +
+prefill/decode step on CPU, asserting shapes and finiteness.
+
+Full configs are exercised only by the dry-run (ShapeDtypeStruct).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_reduced
+from repro.models import model as M
+
+BATCH, SEQ = 2, 32
+
+
+def _batch(cfg, seq=SEQ, batch=BATCH):
+    rng = np.random.default_rng(0)
+    out = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)}
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(batch, cfg.n_frontend_tokens,
+                             cfg.frontend_dim)), jnp.float32)
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            rng.normal(size=(batch, seq, cfg.frontend_dim)), jnp.float32)
+    return out
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch(request):
+    cfg = get_reduced(request.param)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg, params = arch
+    batch = _batch(cfg)
+    logits, aux = jax.jit(lambda p, b: M.forward(cfg, p, b, remat=False))(
+        params, batch)
+    s = SEQ + (cfg.n_frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (BATCH, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+def test_train_grad_step(arch):
+    cfg, params = arch
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, b):
+        return jax.value_and_grad(lambda pp: M.loss_fn(cfg, pp, b))(p)
+
+    loss, grads = step(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    assert any(float(jnp.abs(g.astype(jnp.float32)).max()) > 0
+               for g in leaves), "gradients must not be all-zero"
+
+
+def test_prefill_then_decode(arch):
+    cfg, params = arch
+    prefix = cfg.n_frontend_tokens if cfg.family == "vlm" else 0
+    max_len = SEQ + prefix + 4
+    batch = _batch(cfg)
+    cache = M.init_cache(cfg, BATCH, max_len)
+
+    logits, cache = jax.jit(
+        lambda p, b, c: M.prefill(cfg, p, b, c, remat=False))(
+        params, batch, cache)
+    assert logits.shape == (BATCH, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    dec = jax.jit(lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos))
+    for i in range(3):
+        logits, cache = dec(params, tok, cache, jnp.int32(SEQ + prefix + i))
+        assert logits.shape == (BATCH, 1, cfg.vocab_size)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce full-forward logits
+    (cache correctness), for cacheable families.  Run in f32 so the
+    comparison tests cache *semantics*, not bf16 summation order
+    (flash and dense attention accumulate in different orders)."""
+    import dataclasses
+    cfg, _ = arch
+    if cfg.family == "vlm":
+        pytest.skip("vlm prefill includes patch prefix; covered above")
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    if cfg.family == "moe":
+        # capacity drops depend on the token count per dispatch, so prefill
+        # (T=8) and full forward (T=16) drop different tokens — legitimate
+        # MoE semantics, but noise for this equivalence test.  Make the
+        # capacity non-binding.
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg, seq=8)
+    full, _ = jax.jit(lambda p, b: M.forward(cfg, p, b, remat=False))(
+        params, batch)
+
+    cache = M.init_cache(cfg, BATCH, 8)
+    toks = batch["tokens"]
+    b0 = dict(batch)
+    b0["tokens"] = toks[:, :4]
+    if cfg.family == "encdec":
+        b0["frames"] = batch["frames"]
+    logits, cache = jax.jit(
+        lambda p, b, c: M.prefill(cfg, p, b, c, remat=False))(
+        params, b0, cache)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0], np.float32),
+        np.asarray(full[:, 3], np.float32), rtol=2e-2, atol=2e-2)
+    dec = jax.jit(lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos))
+    for i in range(4, 8):
+        logits, cache = dec(params, toks[:, i: i + 1], cache, jnp.int32(i))
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0], np.float32),
+            np.asarray(full[:, i], np.float32), rtol=2e-2, atol=2e-2)

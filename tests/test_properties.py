@@ -1,0 +1,104 @@
+"""Hypothesis property tests over the system's core invariants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.beam_search import SearchSpec, beam_search_l2
+from repro.core.vamana import VamanaParams, build_vamana
+
+# a single module-level graph (hypothesis draws queries, not corpora)
+_RNG = np.random.default_rng(7)
+_VECS = _RNG.normal(size=(500, 10)).astype(np.float32)
+_ADJ, _MED = build_vamana(_VECS, VamanaParams(max_degree=12, build_beam=24,
+                                              batch=256))
+_JADJ, _JVECS = jnp.asarray(_ADJ), jnp.asarray(_VECS)
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 8), st.integers(2, 24))
+@settings(max_examples=25, deadline=None)
+def test_search_results_always_sorted_unique_valid(seed, k, beam):
+    beam = max(beam, k)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(8, 10)).astype(np.float32))
+    spec = SearchSpec(beam_width=beam, k=k, max_iters=96)
+    res = beam_search_l2(_JADJ, _JVECS, q,
+                         jnp.full((8, 1), _MED, jnp.int32), spec)
+    ids = np.asarray(res.ids)
+    d = np.asarray(res.dists)
+    for row in range(8):
+        vals = ids[row][ids[row] >= 0]
+        assert len(set(vals.tolist())) == len(vals), "duplicate results"
+        dd = d[row][np.isfinite(d[row])]
+        assert np.all(np.diff(dd) >= -1e-6), "unsorted results"
+        # distances must be the true distances to the returned ids
+        for j, v in enumerate(vals):
+            true = ((_VECS[v] - np.asarray(q[row])) ** 2).sum()
+            assert abs(true - d[row, j]) < 1e-2 * max(true, 1.0)
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_more_beam_never_hurts_distance(seed):
+    """Monotonicity: widening the beam cannot worsen the best distance."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(4, 10)).astype(np.float32))
+    best = None
+    for beam in (2, 8, 24):
+        spec = SearchSpec(beam_width=beam, k=1, max_iters=120)
+        res = beam_search_l2(_JADJ, _JVECS, q,
+                             jnp.full((4, 1), _MED, jnp.int32), spec)
+        d = np.asarray(res.dists[:, 0])
+        if best is not None:
+            assert np.all(d <= best + 1e-3), (beam, d, best)
+        best = d
+
+
+@given(st.integers(0, 2 ** 16), st.integers(1, 40))
+@settings(max_examples=20, deadline=None)
+def test_extra_starts_never_hurt(seed, n_extra):
+    """The catapult premise as a property: ADDING starting points can only
+    improve (or match) the best found distance — §3.2 'non-negative
+    benefit'."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(4, 10)).astype(np.float32))
+    spec = SearchSpec(beam_width=8, k=1, max_iters=96)
+    base = beam_search_l2(_JADJ, _JVECS, q,
+                          jnp.full((4, 1), _MED, jnp.int32), spec)
+    extra = rng.integers(0, 500, (4, n_extra)).astype(np.int32)
+    starts = jnp.concatenate(
+        [jnp.full((4, 1), _MED, jnp.int32), jnp.asarray(extra)], axis=1)
+    more = beam_search_l2(_JADJ, _JVECS, q, starts, spec)
+    assert np.all(np.asarray(more.dists[:, 0])
+                  <= np.asarray(base.dists[:, 0]) + 1e-3)
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_chunked_ssm_scan_matches_sequential(s, chunk):
+    """The fused chunked scan equals a naive sequential recurrence."""
+    from repro.models.ssm import fused_ssm_scan
+    rng = np.random.default_rng(s * 7 + chunk)
+    b, di, n = 2, 4, 3
+    dt = jnp.asarray(np.abs(rng.normal(size=(b, s, di))).astype(np.float32))
+    a = jnp.asarray(-np.abs(rng.normal(size=(di, n))).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(b, s, n)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, s, di)).astype(np.float32))
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    y, h_last = fused_ssm_scan(dt, a, bm, cm, x, h0, chunk, "mamba1")
+    # sequential oracle
+    h = np.zeros((b, di, n), np.float32)
+    ys = []
+    for t in range(s):
+        da = np.exp(np.asarray(dt)[:, t, :, None] * np.asarray(a))
+        db = (np.asarray(dt)[:, t, :, None] * np.asarray(x)[:, t, :, None]
+              * np.asarray(bm)[:, t, None, :])
+        h = da * h + db
+        ys.append((h * np.asarray(cm)[:, t, None, :]).sum(-1))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_last), h, rtol=2e-4, atol=2e-4)

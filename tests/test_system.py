@@ -1,0 +1,90 @@
+"""End-to-end behaviour: the paper's headline claims on a replayed workload,
+plus the Table-1 feature matrix as executable assertions."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import (VamanaParams, VectorSearchEngine, brute_force_knn,
+                        recall_at_k)
+from tests.conftest import make_clustered
+
+VP = VamanaParams(max_degree=16, build_beam=32, batch=512)
+
+
+def _zipf_workload(centers, n_queries, d, seed, zipf_a=1.8):
+    """Zipf-sampled cluster queries — miniature Medrag-Zipf (paper §4.1.1)."""
+    rng = np.random.default_rng(seed)
+    ranks = rng.zipf(zipf_a, size=n_queries) % centers.shape[0]
+    q = centers[ranks] + 0.3 * rng.normal(size=(n_queries, d))
+    return q.astype(np.float32)
+
+
+def test_headline_claim_biased_workload(corpus):
+    """Catapults cut hops/distance computations on a Zipf workload while
+    matching DiskANN recall (paper Fig. 5/6)."""
+    data, centers, _ = corpus
+    q = _zipf_workload(centers, 256, data.shape[1], seed=71)
+    truth = brute_force_knn(data, q, 1)
+    dsk = VectorSearchEngine(mode="diskann", vamana=VP).build(data)
+    cat = VectorSearchEngine(mode="catapult", vamana=VP).build(data)
+
+    ids_d, _, st_d = dsk.search(q, k=1, beam_width=4)
+    # stream in two halves: the first warms buckets for the second
+    cat.search(q[:128], k=1, beam_width=4)
+    ids_c, _, st_c = cat.search(q[128:], k=1, beam_width=4)
+
+    r_d = recall_at_k(ids_d[128:], truth[128:])
+    r_c = recall_at_k(ids_c, truth[128:])
+    assert r_c >= r_d - 0.02
+    assert st_c.hops.mean() < st_d.hops[128:].mean() * 0.85
+    assert st_c.ndists.mean() < st_d.ndists[128:].mean() * 0.9
+    assert st_c.used.mean() > 0.85
+
+
+def test_uniform_workload_no_recall_regression(corpus):
+    """Paper §4.3: worst case (no locality) must not hurt recall."""
+    data, _, _ = corpus
+    rng = np.random.default_rng(72)
+    q = rng.uniform(-1, 1, size=(128, data.shape[1])).astype(np.float32) * 4
+    truth = brute_force_knn(data, q, 4)
+    dsk = VectorSearchEngine(mode="diskann", vamana=VP).build(data)
+    cat = VectorSearchEngine(mode="catapult", vamana=VP).build(data)
+    ids_d, _, _ = dsk.search(q, k=4, beam_width=8)
+    cat.search(q, k=4, beam_width=8)
+    ids_c, _, _ = cat.search(q, k=4, beam_width=8)
+    assert recall_at_k(ids_c, truth) >= recall_at_k(ids_d, truth) - 0.03
+
+
+class TestFeatureMatrix:
+    """Table 1 of the paper, as executable checks."""
+
+    def test_catapultdb_supports_everything(self):
+        data, centers, assign = make_clustered(800, 16, 8, seed=81)
+        labels = (assign % 3).astype(np.int32)
+        eng = VectorSearchEngine(mode="catapult", vamana=VP, capacity=1000,
+                                 ).build(data, labels=labels, n_labels=3)
+        # accelerated search: catapult layer active
+        q = (data[:32] + 0.01).astype(np.float32)
+        eng.search(q, k=2, beam_width=8)
+        _, _, st = eng.search(q, k=2, beam_width=8)
+        assert st.used.mean() > 0.8                      # accelerated (LSH)
+        eng.insert(data[:8] + 20.0, labels=np.zeros(8, np.int32))  # insertions
+        ids, _, _ = eng.search(q, k=2, beam_width=8,
+                               filter_labels=np.zeros(32, np.int32))  # filtering
+        assert np.all(labels[np.maximum(ids, 0)][ids >= 0] == 0)
+
+    def test_lsh_apg_lacks_filtering(self):
+        """LSH-APG's entry table is filter-oblivious by construction: its
+        entries may violate any predicate (that is the paper's critique)."""
+        data, _, assign = make_clustered(800, 16, 8, seed=82)
+        eng = VectorSearchEngine(mode="lsh_apg", vamana=VP).build(data)
+        assert eng._labels_np is None  # no label machinery in its index
+
+    def test_proximity_not_insertion_aware(self):
+        # covered quantitatively by test_baselines:
+        # test_proximity_cache_staleness_under_insertion (Fig. 2)
+        from repro.core import proximity_cache as pc
+        state = pc.make_cache(4, 8, 2)
+        flushed = pc.flush(state)   # the only correct response to an insert
+        assert int(flushed.step) == 0

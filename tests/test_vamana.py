@@ -1,0 +1,87 @@
+"""Vamana construction invariants + RobustPrune properties."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import VamanaParams, build_vamana, medoid_index, robust_prune
+
+
+@pytest.fixture(scope="module")
+def graph():
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(600, 12)).astype(np.float32)
+    adj, med = build_vamana(vecs, VamanaParams(max_degree=14, build_beam=28,
+                                               batch=300))
+    return vecs, adj, med
+
+
+def test_degree_bound(graph):
+    vecs, adj, _ = graph
+    assert adj.shape[1] == 14
+    assert np.all((adj >= -1) & (adj < 600))
+
+
+def test_no_self_loops(graph):
+    vecs, adj, _ = graph
+    rows = np.arange(adj.shape[0])[:, None]
+    assert not np.any(adj == rows)
+
+
+def test_medoid_is_central(graph):
+    vecs, _, med = graph
+    c = vecs.mean(0)
+    d_med = ((vecs[med] - c) ** 2).sum()
+    d_all = ((vecs - c) ** 2).sum(1)
+    assert d_med == d_all.min()
+
+
+def test_graph_is_navigable(graph):
+    """Greedy search from the medoid reaches (almost) every node's
+    neighborhood — the navigability property the paper leans on (§3.2
+    'Competitive recall')."""
+    import jax.numpy as jnp
+    from repro.core.beam_search import SearchSpec, beam_search_l2
+    vecs, adj, med = graph
+    spec = SearchSpec(beam_width=20, k=1, max_iters=80)
+    q = jnp.asarray(vecs[:128])
+    res = beam_search_l2(jnp.asarray(adj), jnp.asarray(vecs), q,
+                         jnp.full((128, 1), med, jnp.int32), spec)
+    assert (np.asarray(res.ids[:, 0]) == np.arange(128)).mean() >= 0.95
+
+
+@given(st.integers(0, 2 ** 16), st.integers(4, 24), st.floats(1.0, 2.0))
+@settings(max_examples=20, deadline=None)
+def test_robust_prune_properties(seed, r, alpha):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(80, 6)).astype(np.float32)
+    cand = rng.integers(0, 80, 40).astype(np.int32)
+    out = robust_prune(0, cand, vecs, alpha, r)
+    assert out.size <= r
+    assert 0 not in out.tolist()                      # no self edge
+    assert len(set(out.tolist())) == out.size         # unique
+    assert set(out.tolist()) <= set(cand.tolist())    # subset of candidates
+    if out.size:   # closest candidate always survives
+        d = ((vecs[np.unique(cand[cand != 0])] - vecs[0]) ** 2).sum(1)
+        closest = np.unique(cand[cand != 0])[d.argmin()]
+        assert closest in out.tolist()
+
+
+def test_higher_alpha_shortens_paths():
+    """§3.3: larger alpha -> denser long-range edges -> fewer hops."""
+    import jax.numpy as jnp
+    from repro.core.beam_search import SearchSpec, beam_search_l2
+    rng = np.random.default_rng(1)
+    vecs = rng.normal(size=(800, 10)).astype(np.float32)
+    hops = {}
+    for alpha in (1.0, 1.4):
+        adj, med = build_vamana(vecs, VamanaParams(max_degree=12, alpha=alpha,
+                                                   build_beam=24, batch=400))
+        spec = SearchSpec(beam_width=4, k=1, max_iters=64)
+        res = beam_search_l2(jnp.asarray(adj), jnp.asarray(vecs),
+                             jnp.asarray(vecs[:64]),
+                             jnp.full((64, 1), med, jnp.int32), spec)
+        hops[alpha] = np.asarray(res.hops).mean()
+    assert hops[1.4] <= hops[1.0] * 1.1
