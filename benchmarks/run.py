@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig10_papers/*        — filtered queries
   fig11_heatmap/*       — (b × L) sensitivity
   fig2_*                — Proximity staleness vs CatapultDB under inserts
+  fig12_disk/*          — disk-resident tier: block reads / cache hit rate
   kernel/*              — Pallas kernel microbenches (interpret mode)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -27,8 +28,8 @@ def main() -> None:
                    help="comma-separated section filter")
     args = p.parse_args()
 
-    from benchmarks import (bench_ablations, bench_dynamic, bench_filtered,
-                            bench_hyperparams, bench_kernels,
+    from benchmarks import (bench_ablations, bench_disk, bench_dynamic,
+                            bench_filtered, bench_hyperparams, bench_kernels,
                             bench_substrates, bench_workloads)
 
     quick = args.quick
@@ -51,6 +52,9 @@ def main() -> None:
         "ablations": lambda: bench_ablations.run(
             n=3_000 if quick else 8_000,
             n_queries=512 if quick else 2_048),
+        "disk": lambda: bench_disk.run(
+            n=4_000 if quick else 12_000,
+            n_queries=1_024 if quick else 3_072),
         "kernels": bench_kernels.run,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -8,7 +8,8 @@ the evaluated baselines (vanilla DiskANN, LSH-APG, the Proximity cache).
 from repro.core.beam_search import SearchSpec, beam_search, beam_search_l2, l2_dist_fn
 from repro.core.buckets import BucketState, make_buckets, lookup, publish
 from repro.core.catapult import CatapultState, catapulted_lookup, make_catapult_state
-from repro.core.engine import (SearchStats, VectorSearchEngine, brute_force_knn,
+from repro.core.engine import (DiskStore, RamStore, SearchStats,
+                               VectorSearchEngine, brute_force_knn,
                                recall_at_k)
 from repro.core.lsh import LSHParams, hash_codes, make_lsh
 from repro.core.vamana import VamanaParams, build_vamana, medoid_index, robust_prune
@@ -18,6 +19,7 @@ __all__ = [
     "BucketState", "make_buckets", "lookup", "publish",
     "CatapultState", "catapulted_lookup", "make_catapult_state",
     "SearchStats", "VectorSearchEngine", "brute_force_knn", "recall_at_k",
+    "RamStore", "DiskStore",
     "VamanaParams", "build_vamana", "medoid_index", "robust_prune",
     "LSHParams", "hash_codes", "make_lsh",
 ]

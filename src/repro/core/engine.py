@@ -47,6 +47,67 @@ class SearchStats(NamedTuple):
     ndists: np.ndarray        # (B,) distance computations
     used: np.ndarray          # (B,) bool catapult used (catapult mode only)
     won: np.ndarray           # (B,) bool catapult beat fallback
+    # disk-backed engines only (None on the RAM path):
+    block_reads: Optional[np.ndarray] = None   # (B,) node blocks read from disk
+    cache_hits: Optional[np.ndarray] = None    # (B,) node cache hits
+
+
+# ---------------------------------------------------------------------------
+# Storage backends — build()/search()/insert() are backend-agnostic: the
+# engine holds its host-side vector/adjacency mirrors as views supplied by a
+# NodeStore, so the same graph surgery runs against RAM arrays or memmap'd
+# disk blocks (repro.store.layout).
+# ---------------------------------------------------------------------------
+
+class RamStore:
+    """Device-memory-scale backend: plain numpy arrays (seed behaviour)."""
+
+    def __init__(self, vectors: np.ndarray, adjacency: np.ndarray):
+        self.vectors = vectors        # (capacity, d) float32
+        self.adjacency = adjacency    # (capacity, R) int32, -1 padded
+
+    @classmethod
+    def allocate(cls, capacity: int, dim: int, degree: int) -> 'RamStore':
+        return cls(np.zeros((capacity, dim), np.float32),
+                   np.full((capacity, degree), -1, np.int32))
+
+    def flush(self) -> None:          # RAM is always "durable enough"
+        pass
+
+    def close(self) -> None:
+        pass
+
+
+class DiskStore:
+    """Disk-resident backend: views into a block-aligned store file.
+
+    ``vectors``/``adjacency`` are strided memmap views into per-node
+    blocks (repro.store.layout), so insert-time graph surgery writes
+    disk pages in place; ``flush`` persists them plus header metadata.
+    """
+
+    def __init__(self, block_store):
+        self.block_store = block_store
+        self.vectors = block_store.vectors
+        self.adjacency = block_store.adjacency
+
+    @classmethod
+    def create(cls, path: str, capacity: int, dim: int, degree: int,
+               has_labels: bool = False) -> 'DiskStore':
+        from repro.store import layout   # lazy: breaks the import cycle
+        return cls(layout.create_store(path, capacity=capacity, dim=dim,
+                                       degree=degree, has_labels=has_labels))
+
+    @classmethod
+    def open(cls, path: str, mode: str = 'r+') -> 'DiskStore':
+        from repro.store import layout
+        return cls(layout.open_store(path, mode=mode))
+
+    def flush(self, **header_updates) -> None:
+        self.block_store.flush(**header_updates)
+
+    def close(self) -> None:
+        self.block_store.close()
 
 
 def brute_force_knn(vectors: np.ndarray, queries: np.ndarray, k: int,
@@ -86,6 +147,7 @@ class VectorSearchEngine:
     pq_subspaces: Optional[int] = None
     seed: int = 0
     capacity: Optional[int] = None  # adjacency row preallocation for inserts
+    store: Optional[object] = None  # NodeStore backend; default RamStore
 
     # populated by build()
     n_active: int = 0
@@ -103,8 +165,6 @@ class VectorSearchEngine:
         n, d = vectors.shape
         cap = self.capacity or n
         self.filtered = labels is not None
-        key = jax.random.PRNGKey(self.seed)
-        k_lsh, k_apg, k_pq = jax.random.split(key, 3)
 
         if self.filtered:
             assert n_labels is not None
@@ -124,20 +184,45 @@ class VectorSearchEngine:
                 adj, med = build_vamana(vectors, self.vamana, capacity=cap)
             self._label_entry = None
             self._labels_np = None
-        adj = adj.copy()   # engines may insert independently
-
-        if cap > adj.shape[0]:
-            grown = np.full((cap, adj.shape[1]), -1, np.int32)
-            grown[: adj.shape[0]] = adj
-            adj = grown
-        self._adj_np = adj
-        self._vec_np = np.zeros((cap, d), np.float32)
-        self._vec_np[:n] = vectors
+        # Copy graph + vectors into the storage backend; the engine's host
+        # mirrors are backend-owned views from here on (a prebuilt graph is
+        # therefore never shared by reference — engines insert independently).
+        if self.store is None:
+            self.store = self._make_store(cap, d, adj.shape[1])
+        sv, sa = self.store.vectors, self.store.adjacency
+        assert sv.shape == (cap, d) and sa.shape == (cap, adj.shape[1]), (
+            "store geometry mismatch", sv.shape, sa.shape, (cap, d))
+        rows = min(adj.shape[0], cap)
+        sa[:rows] = adj[:rows]
+        sa[rows:] = -1
+        sv[:n] = vectors
+        sv[n:] = 0.0
+        self._adj_np = sa
+        self._vec_np = sv
         self._tomb_np = np.zeros(cap, bool)
         # rows >= n are tombstoned until inserted
         self._tomb_np[n:] = True
         self.n_active, self.medoid = n, med
 
+        self._init_aux(vectors)
+        self._sync_device()
+        return self
+
+    def _make_store(self, capacity: int, dim: int, degree: int):
+        """Backend factory — subclasses swap RAM for disk here."""
+        return RamStore.allocate(capacity, dim, degree)
+
+    def _init_aux(self, vectors: np.ndarray) -> None:
+        """(Re)derive the mode's auxiliary state from the active vectors:
+        catapult LSH + buckets, LSH-APG entries, PQ codebook + codes.
+
+        Deterministic in (seed, vectors), so a reopened disk store
+        retrains to bit-identical state without persisting codebooks.
+        """
+        n, d = vectors.shape
+        cap = self._vec_np.shape[0]
+        key = jax.random.PRNGKey(self.seed)
+        k_lsh, k_apg, k_pq = jax.random.split(key, 3)
         if self.mode == 'catapult':
             self._cat = cat.make_catapult_state(
                 k_lsh, d, self.n_bits, self.bucket_capacity)
@@ -150,8 +235,6 @@ class VectorSearchEngine:
             codes = np.zeros((cap, self.pq_subspaces), np.int32)
             codes[:n] = np.asarray(pq_mod.encode(self._pq, jnp.asarray(vectors)))
             self._codes_np = codes
-        self._sync_device()
-        return self
 
     # ---------------------------------------------------------------- device
     def _sync_device(self) -> None:
@@ -191,28 +274,7 @@ class VectorSearchEngine:
                    if filter_labels is not None
                    else jnp.full((b,), -1, jnp.int32))
 
-        if self.mode == 'catapult':
-            new_cat, res, st = _search_catapult(
-                self._cat, self._adj, self._vec, self._tomb, self._labels,
-                self._label_entry, queries, flabels, jnp.int32(self.medoid),
-                spec, self.pq_subspaces or 0,
-                self._pq if self.pq_subspaces else None,
-                self._codes if self.pq_subspaces else None)
-            self._cat = new_cat
-            used, won = np.asarray(st.used), np.asarray(st.won)
-        elif self.mode == 'lsh_apg':
-            res = _search_apg(self._apg, self._adj, self._vec, self._tomb,
-                              self._labels, queries, flabels,
-                              jnp.int32(self.medoid), spec)
-            used = won = np.zeros(b, bool)
-        else:
-            res = _search_diskann(self._adj, self._vec, self._tomb,
-                                  self._labels, self._label_entry, queries,
-                                  flabels, jnp.int32(self.medoid), spec,
-                                  self.pq_subspaces or 0,
-                                  self._pq if self.pq_subspaces else None,
-                                  self._codes if self.pq_subspaces else None)
-            used = won = np.zeros(b, bool)
+        res, used, won = self._dispatch(queries, flabels, spec)
 
         ids, dists = np.asarray(res.ids), np.asarray(res.dists)
         if self.pq_subspaces:   # full-precision rerank (DiskANN final fetch)
@@ -222,6 +284,38 @@ class VectorSearchEngine:
         stats = SearchStats(hops=np.asarray(res.hops),
                             ndists=np.asarray(res.ndists), used=used, won=won)
         return ids, dists, stats
+
+    def _dispatch(self, queries: jax.Array, flabels: jax.Array,
+                  spec: 'SearchSpec'):
+        """Run the mode's jit'd traversal; returns (raw result, used, won).
+
+        Shared by the RAM search above and the disk engine's I/O-counted
+        rerank path (repro.store.io_engine), which consumes the raw
+        expansion trace instead of the device-side rerank.
+        """
+        b = queries.shape[0]
+        if self.mode == 'catapult':
+            new_cat, res, st = _search_catapult(
+                self._cat, self._adj, self._vec, self._tomb, self._labels,
+                self._label_entry, queries, flabels, jnp.int32(self.medoid),
+                spec, self.pq_subspaces or 0,
+                self._pq if self.pq_subspaces else None,
+                self._codes if self.pq_subspaces else None)
+            self._cat = new_cat
+            return res, np.asarray(st.used), np.asarray(st.won)
+        if self.mode == 'lsh_apg':
+            res = _search_apg(self._apg, self._adj, self._vec, self._tomb,
+                              self._labels, queries, flabels,
+                              jnp.int32(self.medoid), spec)
+        else:
+            res = _search_diskann(self._adj, self._vec, self._tomb,
+                                  self._labels, self._label_entry, queries,
+                                  flabels, jnp.int32(self.medoid), spec,
+                                  self.pq_subspaces or 0,
+                                  self._pq if self.pq_subspaces else None,
+                                  self._codes if self.pq_subspaces else None)
+        z = np.zeros(b, bool)
+        return res, z, z
 
     def search_two_phase(self, queries: np.ndarray, k: int,
                          beam_width: int | None = None,
@@ -246,14 +340,14 @@ class VectorSearchEngine:
                 jnp.asarray(queries), jnp.full((b,), -1, jnp.int32),
                 jnp.int32(self.medoid), spec1, 0, None, None)
             self._cat = new_cat
-            used = np.asarray(st.used)
+            used, won = np.asarray(st.used), np.asarray(st.won)
         else:
             res = _search_diskann(self._adj, self._vec, self._tomb, None,
                                   None, jnp.asarray(queries),
                                   jnp.full((b,), -1, jnp.int32),
                                   jnp.int32(self.medoid), spec1, 0, None,
                                   None)
-            used = np.zeros(b, bool)
+            used = won = np.zeros(b, bool)
         ids = np.array(res.ids)
         dists = np.array(res.dists)
         hops = np.array(res.hops)
@@ -278,8 +372,10 @@ class VectorSearchEngine:
                 hops[part] += np.asarray(res2.hops)[: part.size]
                 ndists[part] += np.asarray(res2.ndists)[: part.size]
         order = np.argsort(dists, axis=1)[:, :k]
-        stats = SearchStats(hops=hops, ndists=ndists, used=used,
-                            won=np.zeros(b, bool))
+        # `won` is a phase-1 property: catapult starts either beat the
+        # medoid at entry or they don't — phase-2 warm restarts reuse the
+        # phase-1 beam, so the phase-1 CatapultStats carry through intact.
+        stats = SearchStats(hops=hops, ndists=ndists, used=used, won=won)
         return (np.take_along_axis(ids, order, 1),
                 np.take_along_axis(dists, order, 1), stats)
 

@@ -1,0 +1,35 @@
+"""repro.store — disk-resident index storage (DiskANN's SSD tier).
+
+The paper claims catapults compose with "disk-resident indices": fewer
+hops means fewer *block reads*, not just fewer distance computations.
+This package makes that measurable:
+
+* ``layout``    — block-aligned on-disk node format (vector + adjacency
+                  co-located per node, memmap-backed),
+* ``cache``     — CLOCK node cache over block frames with hit/miss/read
+                  accounting and pinning for hot nodes,
+* ``io_engine`` — ``DiskVectorSearchEngine``: PQ codes + adjacency stay
+                  device-resident for traversal; full-precision vectors
+                  are read from node blocks through the cache.
+
+See FORMAT.md in this directory for the on-disk format specification.
+"""
+from repro.store.cache import NodeCache
+from repro.store.layout import (BlockStore, StoreHeader, block_size_for,
+                                create_store, open_store, write_store)
+
+__all__ = [
+    "BlockStore", "StoreHeader", "NodeCache",
+    "block_size_for", "create_store", "open_store", "write_store",
+    "DiskVectorSearchEngine",
+]
+
+
+def __getattr__(name):
+    # io_engine imports repro.core (which may itself be mid-import when it
+    # lazily pulls in repro.store.layout for DiskStore) — resolve the
+    # engine class on first touch instead of at package import time.
+    if name == "DiskVectorSearchEngine":
+        from repro.store.io_engine import DiskVectorSearchEngine
+        return DiskVectorSearchEngine
+    raise AttributeError(name)

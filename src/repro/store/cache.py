@@ -1,0 +1,187 @@
+"""I/O-counting node cache over block frames (CLOCK replacement).
+
+A disk-resident graph index is dominated by block reads, and which
+blocks are read is governed by the caching strategy (GoVector's core
+observation).  This cache holds decoded node blocks in fixed frames and
+services the engine's batched "fetch these nodes" requests:
+
+* CLOCK replacement — one reference bit per frame, a sweeping hand;
+  approximates LRU at O(1) per eviction with no ordered structure,
+* hit/miss/block-read counters — global and returned per ``fetch`` call
+  so the engine can attribute I/O to individual queries,
+* pinning — frames holding structurally hot nodes (the medoid, per-label
+  entry points) are never evicted; *catapult destinations* rotate
+  through a bounded pin budget (``pin_rotating``) since the hot set
+  drifts with the workload.
+
+The cache is deliberately host-side and sequential: it models (and on a
+real deployment would sit in front of) the SSD read path, which is
+serialized per queue pair anyway.  The device-side traversal never
+blocks on it — only the full-precision rerank does.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+
+class NodeCache:
+    """Fixed-capacity frame cache over a ``layout.BlockStore``."""
+
+    def __init__(self, store, capacity: int = 1024,
+                 pin_budget: int | None = None):
+        if capacity < 2:
+            raise ValueError("cache needs at least 2 frames")
+        self.store = store
+        self.capacity = capacity
+        dim, degree = store.header.dim, store.header.degree
+        self.frame_vec = np.zeros((capacity, dim), np.float32)
+        self.frame_adj = np.full((capacity, degree), -1, np.int32)
+        self.frame_node = np.full(capacity, -1, np.int64)
+        self.ref = np.zeros(capacity, bool)
+        self.pinned = np.zeros(capacity, bool)
+        self.frame_of: dict[int, int] = {}
+        self.hand = 0
+        # hard ceiling so CLOCK always finds a victim frame
+        self.max_pinned = max(1, capacity - max(1, capacity // 8))
+        self.pin_budget = min(pin_budget or max(1, capacity // 4),
+                              self.max_pinned)
+        self._rotating: deque[int] = deque()     # FIFO of soft-pinned nodes
+        self._rotating_set: set[int] = set()
+        self.hits = 0
+        self.misses = 0
+        self.block_reads = 0
+
+    # ------------------------------------------------------------ replacement
+    def _victim(self) -> int:
+        """CLOCK sweep: skip pinned frames, give referenced ones a pass."""
+        while True:
+            f = self.hand
+            self.hand = (self.hand + 1) % self.capacity
+            if self.pinned[f]:
+                continue
+            if self.ref[f]:
+                self.ref[f] = False
+                continue
+            return f
+
+    def _load(self, node: int) -> int:
+        """Read one block from the store into a frame (one disk I/O)."""
+        f = self._victim()
+        old = int(self.frame_node[f])
+        if old >= 0:
+            self.frame_of.pop(old, None)
+        blk = self.store.read_block(node)
+        self.frame_vec[f] = blk["vec"]
+        self.frame_adj[f] = blk["adj"]
+        self.frame_node[f] = node
+        self.frame_of[node] = f
+        self.ref[f] = True
+        self.block_reads += 1
+        return f
+
+    # ------------------------------------------------------------ fetch
+    def fetch(self, node_ids: np.ndarray
+              ) -> tuple[np.ndarray, np.ndarray, int, int]:
+        """Service one batched node request.
+
+        Returns ``(vectors (m, d), adjacency (m, R), hits, misses)``
+        aligned with ``node_ids``.  Each miss is exactly one block read.
+        Duplicate ids within a call hit the frame loaded by the first
+        occurrence (the elevator coalescing a real I/O engine would do).
+
+        Contents are copied out as each node resolves: when the request
+        exceeds the frame pool, a later load may evict an earlier node's
+        frame within the same call, so deferring the gather would hand
+        back overwritten frames.
+        """
+        ids = np.asarray(node_ids).ravel()
+        out_vec = np.empty((ids.size, self.frame_vec.shape[1]), np.float32)
+        out_adj = np.empty((ids.size, self.frame_adj.shape[1]), np.int32)
+        hits = misses = 0
+        for j, node in enumerate(ids):
+            node = int(node)
+            f = self.frame_of.get(node)
+            if f is None:
+                f = self._load(node)
+                misses += 1
+            else:
+                self.ref[f] = True
+                hits += 1
+            out_vec[j] = self.frame_vec[f]
+            out_adj[j] = self.frame_adj[f]
+        self.hits += hits
+        self.misses += misses
+        return out_vec, out_adj, hits, misses
+
+    # ------------------------------------------------------------ pinning
+    def pin(self, node_ids) -> None:
+        """Permanently pin nodes (medoid, label entry points).
+
+        Loading a not-yet-cached pin costs one block read (a prefetch);
+        pins beyond the safety ceiling are ignored rather than wedging
+        the CLOCK sweep.
+        """
+        for node in np.atleast_1d(np.asarray(node_ids)).ravel():
+            node = int(node)
+            if node < 0:
+                continue
+            if int(self.pinned.sum()) >= self.max_pinned:
+                return
+            f = self.frame_of.get(node)
+            if f is None:
+                f = self._load(node)
+            self.pinned[f] = True
+
+    def pin_rotating(self, node_ids) -> None:
+        """Soft-pin a drifting hot set (catapult destinations).
+
+        Keeps at most ``pin_budget`` rotating pins, unpinning the oldest
+        first — the disk-tier analogue of the bucket layer's LRU.
+        """
+        for node in np.atleast_1d(np.asarray(node_ids)).ravel():
+            node = int(node)
+            if node < 0 or node in self._rotating_set:
+                continue
+            while (len(self._rotating) >= self.pin_budget
+                   or int(self.pinned.sum()) >= self.max_pinned):
+                if not self._rotating:
+                    return    # ceiling is all hard pins; nothing to rotate out
+                old = self._rotating.popleft()
+                self._rotating_set.discard(old)
+                fo = self.frame_of.get(old)
+                if fo is not None:
+                    self.pinned[fo] = False
+            f = self.frame_of.get(node)
+            if f is None:
+                f = self._load(node)
+            if not self.pinned[f]:
+                self.pinned[f] = True
+                self._rotating.append(node)
+                self._rotating_set.add(node)
+
+    # ------------------------------------------------------------ maintenance
+    def invalidate(self) -> None:
+        """Drop every frame (after graph surgery rewrites adjacency rows).
+
+        Counters survive; pins are re-established by the engine.
+        """
+        self.frame_of.clear()
+        self.frame_node[:] = -1
+        self.ref[:] = False
+        self.pinned[:] = False
+        self._rotating.clear()
+        self._rotating_set.clear()
+
+    def reset_counters(self) -> None:
+        self.hits = self.misses = self.block_reads = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    @property
+    def resident(self) -> int:
+        return len(self.frame_of)

@@ -1,0 +1,262 @@
+"""DiskVectorSearchEngine — the paper's disk-resident deployment, measured.
+
+DiskANN's split (§4.1.2 of the paper's background): PQ-compressed
+vectors and the traversal live in fast memory; full-precision vectors
+sit on SSD in block-aligned node blocks and are fetched only to rerank.
+Every node *expansion* also reads that node's block (the adjacency row
+lives in it) — so the traversal's hop count IS the query's block-read
+count, modulo caching.  Catapults cut hops, therefore catapults cut
+block reads; this engine makes that claim measurable instead of assumed.
+
+Mapping here:
+
+* device-resident: adjacency (traversal gathers), PQ codes + codebook
+  (traversal distances), tombstones, catapult buckets.  The
+  full-precision vector table is NOT uploaded — ``_sync_device``
+  installs a 1-row dummy so any accidental full-precision path fails
+  loudly (wrong shape) instead of silently defeating the tiering.
+* disk-resident: one block per node (vector + adjacency + label) in a
+  ``layout.BlockStore``; the engine's host mirrors are memmap views, so
+  FreshVamana insert surgery mutates disk pages in place.
+* the I/O path: the unchanged beam search runs on device and returns
+  its expansion trace; each lane's trace ∪ final beam is fetched
+  through the CLOCK ``NodeCache`` — misses are counted block reads —
+  and the final rerank computes full-precision distances from the bytes
+  actually read off disk (round-trip correctness rides the hot path).
+* pinning: the medoid and per-label entry points are hard-pinned (every
+  diskann-mode query touches them); catapult destinations rotate
+  through the cache's soft-pin budget as the hot set drifts.
+
+``mode='catapult'`` vs ``mode='diskann'`` now differ in *measured I/O*:
+SearchStats.block_reads / cache_hits are per-query, and the cache keeps
+global counters for the fig12_disk benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.beam_search import SearchSpec
+from repro.core.engine import DiskStore, SearchStats, VectorSearchEngine
+from repro.store.cache import NodeCache
+from repro.store.layout import open_store
+
+
+def default_pq_subspaces(dim: int) -> int:
+    """Largest M in {8, 4, 2} dividing dim (PQ needs dim % M == 0)."""
+    for m in (8, 4, 2):
+        if dim % m == 0:
+            return m
+    return 1
+
+
+@dataclasses.dataclass
+class DiskVectorSearchEngine(VectorSearchEngine):
+    """VectorSearchEngine over a block-aligned disk store + node cache."""
+
+    store_path: str = 'index.ctpl'
+    cache_frames: int = 2048
+    pin_catapult_destinations: bool = True
+
+    def __post_init__(self) -> None:
+        if self.mode not in ('catapult', 'diskann'):
+            # lsh_apg traverses at full precision — incompatible with the
+            # PQ-in-memory / vectors-on-disk split this engine models
+            raise ValueError(f'disk engine supports catapult/diskann modes, '
+                             f'got {self.mode!r}')
+
+    # ------------------------------------------------------------- build/load
+    def build(self, vectors: np.ndarray, labels: np.ndarray | None = None,
+              n_labels: int | None = None,
+              prebuilt=None) -> 'DiskVectorSearchEngine':
+        if self.pq_subspaces is None:
+            # the disk tier is only honest with compressed traversal
+            # distances — full-precision ones would need the vectors in HBM
+            self.pq_subspaces = default_pq_subspaces(vectors.shape[1])
+        super().build(vectors, labels=labels, n_labels=n_labels,
+                      prebuilt=prebuilt)
+        bs = self.store.block_store
+        if self.filtered:
+            bs.labels[: self.n_active] = self._labels_np[: self.n_active]
+        bs.flush(n_active=self.n_active, medoid=self.medoid,
+                 has_labels=self.filtered)
+        self._open_cache()
+        return self
+
+    @classmethod
+    def load(cls, store_path: str, mode: str = 'catapult',
+             **engine_kwargs) -> 'DiskVectorSearchEngine':
+        """Reopen a persisted index without rebuilding the graph.
+
+        Auxiliary state (PQ codebook/codes, LSH planes, buckets) is
+        rederived from (seed, stored vectors) — deterministic, so an
+        index persisted at build time reopens to an identically-answering
+        engine.  Caveat: after post-build ``insert()`` the live engine's
+        codebook was trained on the *build-time* vectors only, while a
+        reopen retrains on everything stored — ADC traversal distances
+        can then differ slightly (the full-precision rerank masks this
+        for results, not for hop/IO counts); persisting the codebook is
+        future work (FORMAT.md).  Catapult buckets start empty, exactly
+        like a fresh process (workload state, not index state).
+        Filtered stores need the label-entry table rebuilt and are not
+        yet reloadable.
+        """
+        bs = open_store(store_path)
+        if bs.header.has_labels:
+            raise NotImplementedError(
+                'reopening filtered stores: per-label entry points are not '
+                'persisted yet (FORMAT.md, future work)')
+        eng = cls(mode=mode, store_path=store_path, **engine_kwargs)
+        if eng.pq_subspaces is None:
+            eng.pq_subspaces = default_pq_subspaces(bs.header.dim)
+        eng.store = DiskStore(bs)
+        eng._adj_np = bs.adjacency
+        eng._vec_np = bs.vectors
+        eng._labels_np = None
+        eng._label_entry = None
+        eng.filtered = False
+        eng.n_active, eng.medoid = bs.n_active, bs.medoid
+        eng.capacity = bs.capacity
+        eng._tomb_np = np.zeros(bs.capacity, bool)
+        eng._tomb_np[bs.n_active:] = True
+        eng._init_aux(np.ascontiguousarray(bs.vectors[: bs.n_active],
+                                           np.float32))
+        eng._sync_device()
+        eng._open_cache()
+        return eng
+
+    def _make_store(self, capacity: int, dim: int, degree: int) -> DiskStore:
+        return DiskStore.create(self.store_path, capacity=capacity, dim=dim,
+                                degree=degree, has_labels=self.filtered)
+
+    def _open_cache(self) -> None:
+        self._cache = NodeCache(self.store.block_store,
+                                capacity=self.cache_frames)
+        self._repin()
+
+    def _repin(self) -> None:
+        self._cache.pin(self.medoid)
+        if self._label_entry is not None:
+            self._cache.pin(np.asarray(self._label_entry))
+
+    def reset_io(self) -> None:
+        """Cold-start the I/O path (benchmark hygiene): drop every cached
+        frame and counter, then re-establish the structural pins."""
+        self._cache.invalidate()
+        self._cache.reset_counters()
+        self._repin()
+
+    @property
+    def cache(self) -> NodeCache:
+        return self._cache
+
+    # ------------------------------------------------------------- device
+    def _sync_device(self) -> None:
+        self._adj = jnp.asarray(self._adj_np)
+        self._tomb = jnp.asarray(self._tomb_np)
+        self._labels = (jnp.asarray(self._labels_np)
+                        if self._labels_np is not None else None)
+        self._codes = jnp.asarray(self._codes_np)
+        # full-precision vectors stay on disk — see module docstring
+        self._vec = jnp.zeros((1, self._vec_np.shape[1]), jnp.float32)
+
+    # ------------------------------------------------------------- search
+    def search(self, queries: np.ndarray, k: int,
+               beam_width: int | None = None,
+               filter_labels: np.ndarray | None = None,
+               max_iters: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Beam search on device, block fetch + rerank through the cache."""
+        q_np = np.ascontiguousarray(queries, np.float32)
+        queries_j = jnp.asarray(q_np)
+        b = queries_j.shape[0]
+        # Wider default beam than the RAM engine (L ≈ 3k, not 2k): the
+        # traversal is steered by PQ-approximate distances, and the slack
+        # keeps true neighbors in the frontier despite quantization noise —
+        # the same L/k ≥ 3 regime reference DiskANN ships with.
+        l = beam_width or max(3 * k, 24)
+        spec = SearchSpec(beam_width=l, k=l,
+                          max_iters=max_iters or (4 * l + 64))
+        flabels = (jnp.asarray(filter_labels, jnp.int32)
+                   if filter_labels is not None
+                   else jnp.full((b,), -1, jnp.int32))
+
+        res, used, won = self._dispatch(queries_j, flabels, spec)
+        beam_ids = np.asarray(res.ids)          # (B, l), tombstones masked
+        trace = np.asarray(res.trace)           # (B, max_iters), -1 padded
+        fl_np = (np.asarray(filter_labels, np.int32)
+                 if filter_labels is not None else None)
+
+        out_ids = np.full((b, k), -1, np.int32)
+        out_d = np.full((b, k), np.inf, np.float32)
+        block_reads = np.zeros(b, np.int32)
+        cache_hits = np.zeros(b, np.int32)
+        for lane in range(b):
+            beam = beam_ids[lane]
+            beam = beam[beam >= 0]
+            expanded = trace[lane]
+            expanded = expanded[expanded >= 0]
+            # DiskANN's per-query I/O: a block per expansion (the adjacency
+            # row lives in it) plus the unexpanded beam tail for rerank.
+            want = np.unique(np.concatenate([expanded, beam]))
+            if want.size == 0:
+                continue
+            vecs, _, hits, misses = self._cache.fetch(want)
+            cache_hits[lane], block_reads[lane] = hits, misses
+            # Rerank EVERY fetched block, not just the beam: true neighbors
+            # that PQ noise evicted from the beam were still expanded, so
+            # their full-precision vectors are already in hand — free
+            # recall at zero extra I/O (DiskANN's visited-list rerank).
+            # Trace nodes bypassed the device-side result mask, so apply
+            # tombstone/filter constraints host-side.
+            keep = ~self._tomb_np[want]
+            if fl_np is not None and self._labels_np is not None \
+                    and fl_np[lane] >= 0:
+                keep &= self._labels_np[want] == fl_np[lane]
+            cand = want[keep]
+            if cand.size == 0:
+                continue
+            d = ((vecs[keep] - q_np[lane]) ** 2).sum(-1)
+            order = np.argsort(d, kind='stable')[:k]
+            out_ids[lane, : order.size] = cand[order]
+            out_d[lane, : order.size] = d[order]
+
+        if self.mode == 'catapult' and self.pin_catapult_destinations:
+            # the freshly published destinations (best neighbor per query)
+            # are the likeliest next landing blocks — soft-pin them
+            dests = out_ids[:, 0]
+            self._cache.pin_rotating(np.unique(dests[dests >= 0]))
+
+        stats = SearchStats(hops=np.asarray(res.hops),
+                            ndists=np.asarray(res.ndists),
+                            used=used, won=won,
+                            block_reads=block_reads, cache_hits=cache_hits)
+        return out_ids, out_d, stats
+
+    def search_two_phase(self, queries: np.ndarray, k: int,
+                         beam_width: int | None = None,
+                         phase1_iters: int = 8):
+        raise NotImplementedError(
+            'two-phase compaction restarts from raw beams at full precision '
+            '— a RAM-engine optimization; the disk tier reranks via the '
+            'block cache instead')
+
+    # ------------------------------------------------------------- updates
+    def insert(self, new_vectors: np.ndarray,
+               labels: np.ndarray | None = None) -> None:
+        start = self.n_active
+        super().insert(new_vectors, labels)   # writes memmap pages + flush
+        bs = self.store.block_store
+        if self.filtered:
+            bs.labels[start: self.n_active] = \
+                self._labels_np[start: self.n_active]
+        bs.flush(n_active=self.n_active, medoid=self.medoid)
+        # insert surgery rewrites back-edges of existing nodes — cached
+        # frames may hold stale adjacency; drop them and re-pin
+        self._cache.invalidate()
+        self._repin()
+
+    def close(self) -> None:
+        self.store.close()

@@ -1,0 +1,219 @@
+"""Block-aligned on-disk index layout (DiskANN's SSD node format).
+
+DiskANN stores each node's full-precision vector and adjacency row
+co-located in one fixed-size block so a single SSD read serves both the
+rerank fetch and the traversal expansion.  This module reproduces that
+layout with numpy memmaps:
+
+  file := header block (HEADER_SIZE bytes) ++ capacity * node block
+
+  node block (block_size bytes, a multiple of SECTOR):
+      [0,              4*dim)              vector, float32 little-endian
+      [4*dim,          4*dim + 4*degree)   adjacency row, int32, -1 padded
+      [4*dim+4*degree, +4)                 label, int32 (-1 = unlabeled)
+      [...,            block_size)         zero padding to sector boundary
+
+The header (see ``StoreHeader``) carries magic/version plus everything
+needed to reconstruct the node dtype: capacity, n_active, dim, degree,
+block_size, medoid, has_labels.  ``open_store`` refuses unknown magic or
+versions — see FORMAT.md for the versioning policy.
+
+Memmap views are the write path too: ``BlockStore.vectors`` /
+``.adjacency`` are strided ndarray views into the block file, so the
+host-side graph surgery of build/insert mutates disk pages in place and
+``flush()`` makes them durable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+MAGIC = 0x4C505443          # "CTPL" little-endian
+VERSION = 1
+SECTOR = 512                # alignment quantum of the node blocks
+HEADER_SIZE = 4096          # one 4 KiB header page
+
+_HEADER_DTYPE = np.dtype([
+    ("magic", "<u4"),
+    ("version", "<u4"),
+    ("capacity", "<i8"),
+    ("n_active", "<i8"),
+    ("dim", "<i4"),
+    ("degree", "<i4"),
+    ("block_size", "<i4"),
+    ("medoid", "<i4"),
+    ("has_labels", "<i4"),
+])
+
+
+class StoreFormatError(RuntimeError):
+    """Bad magic, unsupported version, or size/geometry mismatch."""
+
+
+@dataclasses.dataclass
+class StoreHeader:
+    capacity: int
+    n_active: int
+    dim: int
+    degree: int
+    block_size: int
+    medoid: int = 0
+    has_labels: bool = False
+    version: int = VERSION      # informational; writes always emit VERSION
+
+    def to_bytes(self) -> bytes:
+        rec = np.zeros(1, _HEADER_DTYPE)
+        rec["magic"], rec["version"] = MAGIC, VERSION
+        rec["capacity"], rec["n_active"] = self.capacity, self.n_active
+        rec["dim"], rec["degree"] = self.dim, self.degree
+        rec["block_size"], rec["medoid"] = self.block_size, self.medoid
+        rec["has_labels"] = int(self.has_labels)
+        raw = rec.tobytes()
+        return raw + b"\x00" * (HEADER_SIZE - len(raw))
+
+    @classmethod
+    def from_bytes(cls, raw: bytes) -> "StoreHeader":
+        if len(raw) < _HEADER_DTYPE.itemsize:
+            raise StoreFormatError("truncated header")
+        rec = np.frombuffer(raw[: _HEADER_DTYPE.itemsize], _HEADER_DTYPE)[0]
+        if int(rec["magic"]) != MAGIC:
+            raise StoreFormatError(f"bad magic {int(rec['magic']):#x}")
+        if int(rec["version"]) != VERSION:
+            raise StoreFormatError(
+                f"unsupported version {int(rec['version'])} (have {VERSION})")
+        return cls(capacity=int(rec["capacity"]), n_active=int(rec["n_active"]),
+                   dim=int(rec["dim"]), degree=int(rec["degree"]),
+                   block_size=int(rec["block_size"]), medoid=int(rec["medoid"]),
+                   has_labels=bool(rec["has_labels"]))
+
+
+def block_size_for(dim: int, degree: int) -> int:
+    """Smallest sector multiple holding vector + adjacency + label."""
+    payload = 4 * dim + 4 * degree + 4
+    return ((payload + SECTOR - 1) // SECTOR) * SECTOR
+
+
+def node_dtype(dim: int, degree: int, block_size: int) -> np.dtype:
+    """Structured dtype of one node block (itemsize == block_size)."""
+    return np.dtype({
+        "names": ["vec", "adj", "label"],
+        "formats": [("<f4", (dim,)), ("<i4", (degree,)), "<i4"],
+        "offsets": [0, 4 * dim, 4 * dim + 4 * degree],
+        "itemsize": block_size,
+    })
+
+
+class BlockStore:
+    """An open block file: header + memmap'd node records."""
+
+    def __init__(self, path: str, header: StoreHeader, mode: str = "r+"):
+        self.path = path
+        self.header = header
+        self.writable = mode != "r"
+        self._mm = np.memmap(path, dtype=node_dtype(
+            header.dim, header.degree, header.block_size),
+            mode=mode, offset=HEADER_SIZE, shape=(header.capacity,))
+
+    # ------------------------------------------------------------- views
+    @property
+    def vectors(self) -> np.ndarray:      # (capacity, dim) float32 view
+        return self._mm["vec"]
+
+    @property
+    def adjacency(self) -> np.ndarray:    # (capacity, degree) int32 view
+        return self._mm["adj"]
+
+    @property
+    def labels(self) -> np.ndarray:       # (capacity,) int32 view
+        return self._mm["label"]
+
+    @property
+    def capacity(self) -> int:
+        return self.header.capacity
+
+    @property
+    def n_active(self) -> int:
+        return self.header.n_active
+
+    @property
+    def medoid(self) -> int:
+        return self.header.medoid
+
+    def read_block(self, node: int) -> np.void:
+        """One node record — THE unit of disk I/O the cache accounts."""
+        if not 0 <= node < self.header.capacity:
+            raise IndexError(f"node {node} outside capacity "
+                             f"{self.header.capacity}")
+        return self._mm[node]
+
+    # ------------------------------------------------------------ durability
+    def flush(self, n_active: int | None = None, medoid: int | None = None,
+              has_labels: bool | None = None) -> None:
+        """Persist dirty pages and (optionally) updated header fields."""
+        if not self.writable:
+            raise StoreFormatError("store opened read-only")
+        if n_active is not None:
+            self.header.n_active = int(n_active)
+        if medoid is not None:
+            self.header.medoid = int(medoid)
+        if has_labels is not None:
+            self.header.has_labels = bool(has_labels)
+        self._mm.flush()
+        with open(self.path, "r+b") as f:
+            f.write(self.header.to_bytes())
+
+    def close(self) -> None:
+        del self._mm
+
+
+def create_store(path: str, capacity: int, dim: int, degree: int,
+                 medoid: int = 0, has_labels: bool = False) -> BlockStore:
+    """Allocate a zeroed block file and return it opened read-write.
+
+    Adjacency rows and labels start at -1 (empty), vectors at zero.
+    """
+    bsz = block_size_for(dim, degree)
+    header = StoreHeader(capacity=capacity, n_active=0, dim=dim,
+                         degree=degree, block_size=bsz, medoid=medoid,
+                         has_labels=has_labels)
+    with open(path, "wb") as f:
+        f.write(header.to_bytes())
+        f.truncate(HEADER_SIZE + capacity * bsz)
+    store = BlockStore(path, header, mode="r+")
+    store.adjacency[:] = -1
+    store.labels[:] = -1
+    return store
+
+
+def open_store(path: str, mode: str = "r+") -> BlockStore:
+    """Open an existing store; validates magic, version, and file size."""
+    with open(path, "rb") as f:
+        header = StoreHeader.from_bytes(f.read(HEADER_SIZE))
+    expect = HEADER_SIZE + header.capacity * header.block_size
+    actual = os.path.getsize(path)
+    if actual != expect:
+        raise StoreFormatError(
+            f"file size {actual} != header geometry {expect}")
+    if header.block_size != block_size_for(header.dim, header.degree):
+        raise StoreFormatError("block_size inconsistent with dim/degree")
+    return BlockStore(path, header, mode=mode)
+
+
+def write_store(path: str, vectors: np.ndarray, adjacency: np.ndarray,
+                medoid: int, labels: np.ndarray | None = None,
+                capacity: int | None = None) -> BlockStore:
+    """Persist a built index in one call (build → persist convenience)."""
+    n, dim = vectors.shape
+    cap = capacity or n
+    assert adjacency.shape[0] >= n and cap >= n
+    store = create_store(path, capacity=cap, dim=dim,
+                         degree=adjacency.shape[1], medoid=medoid,
+                         has_labels=labels is not None)
+    store.vectors[:n] = vectors
+    store.adjacency[:n] = adjacency[:n]
+    if labels is not None:
+        store.labels[:n] = labels
+    store.flush(n_active=n)
+    return store

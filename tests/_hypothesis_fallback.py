@@ -1,0 +1,76 @@
+"""Deterministic mini-subset of hypothesis for dependency-free CI.
+
+The tier-1 suite must collect and run on a bare numpy+jax+pytest image.
+When the real ``hypothesis`` is installed the property tests use it (and
+its full shrinking machinery); otherwise this shim drives each property
+with a fixed-seed stream of random examples — weaker than hypothesis,
+but the invariants still get exercised on every run.
+
+Only the strategy combinators the suite actually uses are implemented:
+``st.integers``, ``st.tuples``, ``st.lists``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_FALLBACK_MAX_EXAMPLES = 10     # keep the dependency-free path quick
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.draw(rng) for e in elems))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            size = rng.randint(min_size, max_size)
+            return [elem.draw(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Records the example budget; the shim caps it for speed."""
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Append one drawn value per strategy to the test's arguments."""
+    def deco(fn):
+        n = min(getattr(fn, '_shim_max_examples', 20),
+                _FALLBACK_MAX_EXAMPLES)
+
+        @functools.wraps(fn)
+        def run(*args, **kwargs):
+            rng = random.Random(0xC47A9)      # fixed seed: reproducible CI
+            for _ in range(n):
+                fn(*args, *(s.draw(rng) for s in strats), **kwargs)
+
+        # pytest must not mistake the drawn parameters for fixtures: hide
+        # the wrapped signature (drawn args fill the trailing positions)
+        del run.__wrapped__
+        run.__signature__ = inspect.Signature()
+        return run
+    return deco

@@ -4,8 +4,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:             # optional dep — fall back to the local shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import lsh
 

@@ -8,8 +8,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:             # optional dep — fall back to the local shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.data.pipeline import Prefetcher, TokenPipeline
 from repro.ft import checkpoint as ckpt

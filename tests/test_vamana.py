@@ -3,8 +3,11 @@ from __future__ import annotations
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:             # optional dep — fall back to the local shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import VamanaParams, build_vamana, medoid_index, robust_prune
 
