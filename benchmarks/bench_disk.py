@@ -1,22 +1,40 @@
-"""fig12_disk/* — the paper's disk-resident claim, measured in block reads.
+"""fig12_disk/* + fig12_sharded/* — the disk-resident claim, measured.
 
 "Catapults cut hops" becomes "catapults cut I/O" on a disk-resident
 index: every node expansion reads that node's block (vector + adjacency
 co-located, DiskANN layout), so the traversal length IS the per-query
-SSD read count, modulo the node cache.  This section streams the
-workloads through ``DiskVectorSearchEngine`` in catapult vs diskann
-mode — same prebuilt graph, same PQ, same cache geometry — and reports:
+SSD read count, modulo the node cache.  Two sections:
 
-  block_reads  — mean node blocks read from disk per query,
+* ``fig12_disk/*`` streams the workloads through
+  ``DiskVectorSearchEngine`` in catapult vs diskann mode — same prebuilt
+  graph, same PQ, same cache geometry,
+* ``fig12_sharded/*`` sweeps the scatter-gather
+  ``ShardedDiskVectorSearchEngine`` over S ∈ {1, 2, 4} shards on the
+  biased workload: aggregate per-query block reads should stay
+  flat-or-better vs the single store (the beam splits across shards)
+  while recall holds and build memory scales with the largest shard
+  (``max_shard_rows``).
+
+Reported per row:
+
+  block_reads  — mean node blocks read from disk per query (aggregate
+                 over shards in the sharded sweep),
   hit_rate     — node-cache hit rate over the stream,
-  recall/hops  — to confirm I/O savings don't trade away quality.
+  recall/hops  — to confirm I/O savings don't trade away quality,
+  batched_reads/prefetch_batches — the rerank prefetcher's deduplicated
+                 I/O accounting (CacheStats).
 
 The cache is sized to a fraction of the corpus (not the whole thing):
 with every block cacheable both modes converge to compulsory misses and
 the workload-locality signal disappears.
+
+CLI: ``--quick`` (CI-sized corpora), ``--json PATH`` (machine-readable
+results for the bench-regression gate, see check_regression.py).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import tempfile
 import time
@@ -27,8 +45,10 @@ from benchmarks.common import VP, shared_graph
 from repro.core import brute_force_knn, recall_at_k
 from repro.data.workloads import Workload, make_medrag_zipf, make_uniform
 from repro.store.io_engine import DiskVectorSearchEngine
+from repro.store.sharded_store import ShardedDiskVectorSearchEngine
 
 SYSTEMS = ("diskann", "catapult")
+SHARD_SWEEP = (1, 2, 4)
 K = 8
 # Beam L = 2k, the RAM engine's default: recall saturates there on these
 # workloads (PQ is accurate at d=24/M=8) and hops stay comparable with the
@@ -38,8 +58,13 @@ BEAM = 2 * K
 BATCH = 256
 
 
-def stream_disk(eng: DiskVectorSearchEngine, wl: Workload, *, k: int,
-                name: str, truth: np.ndarray) -> str:
+def _cache_stats(eng):
+    """Aggregate CacheStats for either disk-engine flavour."""
+    return eng.cache_stats if hasattr(eng, "cache_stats") else eng.cache.stats
+
+
+def stream_disk(eng, wl: Workload, *, k: int, name: str,
+                truth: np.ndarray, extra: str = "") -> str:
     q = wl.queries
     n = (q.shape[0] // BATCH) * BATCH
     eng.search(q[:BATCH], k=k, beam_width=BEAM)   # jit warm-up
@@ -56,11 +81,15 @@ def stream_disk(eng: DiskVectorSearchEngine, wl: Workload, *, k: int,
     ids = np.concatenate(all_ids)
     reads = np.concatenate(reads).astype(np.float64)
     hits = np.concatenate(hits).astype(np.float64)
+    cs = _cache_stats(eng)
     derived = (f"block_reads={reads.mean():.2f};"
                f"hit_rate={hits.sum() / max((hits + reads).sum(), 1):.3f};"
                f"recall={recall_at_k(ids, truth):.3f};"
                f"hops={np.concatenate(hops).mean():.1f};"
-               f"total_reads={eng.cache.block_reads}")
+               f"total_reads={cs.block_reads};"
+               f"batched_reads={cs.batched_reads};"
+               f"prefetch_batches={cs.prefetch_batches}"
+               f"{';' + extra if extra else ''}")
     return f"{name},{dt / n * 1e6:.1f},{derived}"
 
 
@@ -89,8 +118,68 @@ def run(n=8_000, n_queries=2_048) -> list[str]:
                         eng, wl, k=K, truth=truth,
                         name=f"fig12_disk/{wl.name}/{regime}/{mode}/k{K}"))
                     eng.close()
+    out.extend(run_sharded(n=n, n_queries=n_queries))
+    return out
+
+
+def run_sharded(n=8_000, n_queries=2_048) -> list[str]:
+    """fig12_sharded/* — scatter-gather sweep, S ∈ {1, 2, 4}.
+
+    The warm-regime frame budget (max(256, n/16), the fig12_disk
+    geometry) is DIVIDED over the shards, so total cache is identical
+    across the sweep and aggregate block reads compare apples-to-apples
+    against the S=1 store — no per-shard floor that would hand larger S
+    extra cache at small (CI) corpus sizes.
+    """
+    out = []
+    wl = make_medrag_zipf(n=n, n_queries=n_queries)
+    n_q = (wl.queries.shape[0] // BATCH) * BATCH
+    truth = brute_force_knn(wl.corpus, wl.queries[:n_q], K)
+    total_frames = max(256, n // 16)
+    for s in SHARD_SWEEP:
+        with tempfile.TemporaryDirectory() as td:
+            eng = ShardedDiskVectorSearchEngine(
+                store_dir=os.path.join(td, f"s{s}"), n_shards=s,
+                mode="catapult", vamana=VP, seed=0,
+                cache_frames=total_frames // s)
+            eng.build(wl.corpus)
+            max_shard_rows = max(e.n_active for e in eng.shards)
+            out.append(stream_disk(
+                eng, wl, k=K, truth=truth,
+                name=f"fig12_sharded/{wl.name}/S{s}/catapult/k{K}",
+                extra=f"shards={s};max_shard_rows={max_shard_rows}"))
+            eng.close()
+    return out
+
+
+def rows_to_json(rows: list[str]) -> dict:
+    """Parse ``name,us_per_call,k=v;k=v`` rows into {name: {metric: float}}.
+
+    Shared with check_regression.py so the emitted artifact and the
+    committed baseline stay structurally identical.
+    """
+    out = {}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        metrics = {"us_per_call": float(us)}
+        for kv in derived.split(";"):
+            key, val = kv.split("=", 1)
+            metrics[key] = float(val)
+        out[name] = metrics
     return out
 
 
 if __name__ == "__main__":
-    print("\n".join(run(n=4_000, n_queries=1_024)))
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized corpora (matches benchmarks.run --quick)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write structured results (regression gate)")
+    args = p.parse_args()
+    n, nq = (4_000, 1_024) if args.quick else (12_000, 3_072)
+    rows = run(n=n, n_queries=nq)
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"corpus_n": n, "n_queries": nq,
+                       "results": rows_to_json(rows)}, f, indent=1)

@@ -1,0 +1,105 @@
+"""Benchmark-regression gate — fails CI when the disk-tier perf story slips.
+
+Compares a fresh ``bench_disk --quick --json`` artifact against the
+committed baseline (benchmarks/baselines/disk_quick.json):
+
+* catapult ``block_reads`` on the biased workload (medrag_zipf) must not
+  regress more than ``max_reads_regression`` (default +10%) on any gated
+  row — the paper's headline I/O claim,
+* ``recall`` must not drop below the committed baseline (minus a 0.005
+  float-noise epsilon) on any gated row,
+* cross-shard parity: the S=4 scatter-gather row must match the S=1
+  single-store row's recall within 1 point (the fig12_sharded
+  acceptance bar), checked on the FRESH run so a sharding regression
+  can't hide behind a stale baseline.
+
+The baseline file is just a bench_disk JSON artifact plus a ``gates``
+list naming the rows under guard.  To re-baseline after an intentional
+perf change:
+
+    PYTHONPATH=src python -m benchmarks.bench_disk --quick \
+        --json benchmarks/baselines/disk_quick.json
+
+then re-add the ``gates`` key (see the committed file) and commit with
+the change that moved the numbers.
+
+Usage:  python -m benchmarks.check_regression BENCH_disk.json \
+            benchmarks/baselines/disk_quick.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RECALL_EPS = 0.005          # float-noise allowance across platforms
+MAX_READS_REGRESSION = 0.10  # +10% block reads = regression
+SHARD_PARITY_POINTS = 0.01   # S=4 within 1 recall point of S=1
+
+
+def check(current: dict, baseline: dict) -> list[str]:
+    """Returns a list of human-readable failures (empty = gate passes)."""
+    failures = []
+    cur = current["results"]
+    base = baseline["results"]
+    for name in baseline.get("gates", []):
+        if name not in base:
+            failures.append(f"{name}: gated row missing from baseline file")
+            continue
+        if name not in cur:
+            failures.append(f"{name}: gated row missing from fresh run")
+            continue
+        b, c = base[name], cur[name]
+        ceiling = b["block_reads"] * (1.0 + MAX_READS_REGRESSION)
+        if c["block_reads"] > ceiling:
+            failures.append(
+                f"{name}: block_reads {c['block_reads']:.2f} > "
+                f"{ceiling:.2f} (baseline {b['block_reads']:.2f} +"
+                f"{MAX_READS_REGRESSION:.0%})")
+        if c["recall"] < b["recall"] - RECALL_EPS:
+            failures.append(
+                f"{name}: recall {c['recall']:.3f} < baseline "
+                f"{b['recall']:.3f} - {RECALL_EPS}")
+
+    # fig12_sharded acceptance: S=4 recall within 1 point of S=1, fresh run
+    s_rows = {name: m for name, m in cur.items()
+              if name.startswith("fig12_sharded/")}
+    s1 = [m for name, m in s_rows.items() if "/S1/" in name]
+    s4 = [m for name, m in s_rows.items() if "/S4/" in name]
+    if s1 and s4:
+        if s4[0]["recall"] < s1[0]["recall"] - SHARD_PARITY_POINTS:
+            failures.append(
+                f"sharded parity: S=4 recall {s4[0]['recall']:.3f} < "
+                f"S=1 recall {s1[0]['recall']:.3f} - {SHARD_PARITY_POINTS}")
+    elif s_rows:
+        failures.append("fig12_sharded rows present but S1/S4 pair missing")
+    return failures
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("current", help="fresh bench_disk --json artifact")
+    p.add_argument("baseline", help="committed baseline JSON")
+    args = p.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline)
+    for name in baseline.get("gates", []):
+        if name in current["results"] and name in baseline["results"]:
+            c, b = current["results"][name], baseline["results"][name]
+            print(f"{name}: block_reads {c['block_reads']:.2f} "
+                  f"(baseline {b['block_reads']:.2f}), recall "
+                  f"{c['recall']:.3f} (baseline {b['recall']:.3f})")
+    if failures:
+        print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for msg in failures:
+            print(f"  - {msg}", file=sys.stderr)
+        return 1
+    print("bench-regression gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

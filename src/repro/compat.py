@@ -1,0 +1,42 @@
+"""JAX version compatibility shims (shared by core, models, launch).
+
+The codebase targets the modern JAX surface — ``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.get_abstract_mesh`` — but the baked-in
+toolchain may ship 0.4.x, where shard_map lives under ``jax.experimental``
+(with ``check_rep`` instead of ``check_vma``), the Mesh object itself is
+the context manager, and the active mesh is tracked per-thread in
+``thread_resources``.  Every shim prefers the modern spelling so nothing
+here changes behaviour once the toolchain catches up.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` with replication checking off, any JAX version."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
+def mesh_context(mesh):
+    """``with mesh_context(mesh):`` — jax.set_mesh where it exists, else
+    the 0.4.x Mesh context manager (legacy thread-resources mesh)."""
+    return jax.set_mesh(mesh) if hasattr(jax, "set_mesh") else mesh
+
+
+def active_abstract_mesh():
+    """The mesh the surrounding jit/mesh context established.
+
+    Modern JAX tracks it via ``jax.sharding.get_abstract_mesh``; on
+    0.4.x the ``with mesh:`` context lands in ``thread_resources`` —
+    both expose ``.empty`` / ``.axis_names`` / ``.shape``.
+    """
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+    return thread_resources.env.physical_mesh

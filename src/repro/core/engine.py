@@ -212,12 +212,18 @@ class VectorSearchEngine:
         """Backend factory — subclasses swap RAM for disk here."""
         return RamStore.allocate(capacity, dim, degree)
 
-    def _init_aux(self, vectors: np.ndarray) -> None:
+    def _init_aux(self, vectors: np.ndarray,
+                  pq_codebook: np.ndarray | None = None) -> None:
         """(Re)derive the mode's auxiliary state from the active vectors:
         catapult LSH + buckets, LSH-APG entries, PQ codebook + codes.
 
         Deterministic in (seed, vectors), so a reopened disk store
         retrains to bit-identical state without persisting codebooks.
+        ``pq_codebook`` short-circuits the PQ retrain with a persisted
+        codebook (repro.store CTPL v2) — codes re-encode from it, so the
+        reopened ADC distances are byte-identical to the live engine's
+        even when the stored vectors include post-build inserts the
+        original training never saw.
         """
         n, d = vectors.shape
         cap = self._vec_np.shape[0]
@@ -230,8 +236,14 @@ class VectorSearchEngine:
             self._apg = apg.build_lsh_apg(vectors, k_apg, self.n_bits,
                                           self.apg_entries)
         if self.pq_subspaces:
-            self._pq = pq_mod.train_pq(k_pq, jnp.asarray(vectors),
-                                       self.pq_subspaces)
+            if pq_codebook is not None:
+                assert pq_codebook.shape[0] == self.pq_subspaces, (
+                    pq_codebook.shape, self.pq_subspaces)
+                self._pq = pq_mod.PQCodebook(
+                    centroids=jnp.asarray(pq_codebook, jnp.float32))
+            else:
+                self._pq = pq_mod.train_pq(k_pq, jnp.asarray(vectors),
+                                           self.pq_subspaces)
             codes = np.zeros((cap, self.pq_subspaces), np.int32)
             codes[:n] = np.asarray(pq_mod.encode(self._pq, jnp.asarray(vectors)))
             self._codes_np = codes

@@ -33,6 +33,35 @@ from repro.core import lsh as lsh_mod
 from repro.core.beam_search import SearchSpec, beam_search, l2_dist_fn
 
 
+from repro.compat import mesh_context, shard_map_compat  # noqa: F401  (re-export:
+# the mesh-engine callers import these alongside the merge helpers below)
+
+
+# ---------------------------------------------------------------------------
+# Scatter-gather primitives — shared by the shard_map RAM path below and
+# the disk-backed scatter-gather engine (repro.store.sharded_store), so
+# both tiers merge shard results with the exact same semantics.
+# ---------------------------------------------------------------------------
+
+def rebase_ids(local_ids, offset):
+    """Shard-local row ids -> global row ids; invalid lanes stay -1."""
+    return jnp.where(local_ids >= 0, local_ids + offset, -1)
+
+
+def merge_topk(all_ids, all_dists, k):
+    """Merge per-shard candidate lists: (S, Q, k') -> global top-k (Q, k).
+
+    Stable in distance order; -1 ids carry +inf distances by convention
+    (per-shard searches mask invalid lanes that way), so they sink.
+    """
+    s, q, kk = all_ids.shape
+    flat_ids = jnp.transpose(all_ids, (1, 0, 2)).reshape(q, s * kk)
+    flat_d = jnp.transpose(all_dists, (1, 0, 2)).reshape(q, s * kk)
+    top = jnp.argsort(flat_d, axis=1)[:, :k]
+    return (jnp.take_along_axis(flat_ids, top, axis=1),
+            jnp.take_along_axis(flat_d, top, axis=1))
+
+
 class ShardedEngineState(NamedTuple):
     """Corpus arrays shard over `model`; catapult buckets are per-DEVICE
     (each data-parallel replica keeps its own, the paper's one-instance-
@@ -99,18 +128,13 @@ def make_sharded_search(mesh, spec: SearchSpec, n_per_shard: int,
 
         # rebase local ids -> global row ids using this shard's position
         shard = jax.lax.axis_index("model")
-        gids = jnp.where(result.ids >= 0,
-                         result.ids + shard * n_per_shard, -1)
+        gids = rebase_ids(result.ids, shard * n_per_shard)
 
         # scatter-gather merge over the corpus shards
         all_ids = jax.lax.all_gather(gids, "model")          # (S, Ql, k)
         all_d = jax.lax.all_gather(result.dists, "model")    # (S, Ql, k)
-        s, ql, k = all_ids.shape
-        flat_ids = all_ids.transpose(1, 0, 2).reshape(ql, s * k)
-        flat_d = all_d.transpose(1, 0, 2).reshape(ql, s * k)
-        top = jnp.argsort(flat_d, axis=1)[:, :k]
-        merged_ids = jnp.take_along_axis(flat_ids, top, axis=1)
-        merged_d = jnp.take_along_axis(flat_d, top, axis=1)
+        merged_ids, merged_d = merge_topk(all_ids, all_d,
+                                          k=all_ids.shape[-1])
 
         nb = new_state.buckets
         return (nb.ids, nb.stamp, nb.step[None], merged_ids, merged_d)
@@ -121,8 +145,8 @@ def make_sharded_search(mesh, spec: SearchSpec, n_per_shard: int,
     out_specs = (P(all_axes, None), P(all_axes, None), P(all_axes),
                  P(qaxes, None), P(qaxes, None))
 
-    smapped = jax.shard_map(local_step, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs, check_vma=False)
+    smapped = shard_map_compat(local_step, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs)
 
     def step(state: ShardedEngineState, queries):
         b_ids, b_stamp, b_step, ids, dists = smapped(

@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.compat import mesh_context
 from repro.launch import roofline as rl
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models import model as M
@@ -181,7 +182,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
                               "§Arch-applicability)"}
         fn, args, shardings, donate, mf, hbm = input_specs(cfg, shape, mesh)
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         jitted = jax.jit(fn, in_shardings=shardings, donate_argnums=donate)
         lowered = jitted.lower(*args)
         hlo = lowered.as_text()

@@ -1,10 +1,19 @@
-"""Batched generation engine: prefill + decode with continuous batching.
+"""Batched serving engines: LM continuous batching + vector-search routing.
 
-Slot-based continuous batching (vLLM-style, sized down): a fixed pool of
-B decode slots; finished sequences free their slot and the next queued
-request is prefilled into it.  All steps are jit'd once per shape; the
-scheduler is host-side.  Single-sequence prefill into a slot uses the
-same ``prefill`` path with batch=1 and a scatter into the pooled cache.
+Two front doors live here:
+
+* ``ServingEngine`` — slot-based continuous batching for LM decode
+  (vLLM-style, sized down): a fixed pool of B decode slots; finished
+  sequences free their slot and the next queued request is prefilled
+  into it.  All steps are jit'd once per shape; the scheduler is
+  host-side.
+* ``VectorSearchFrontend`` — micro-batching router for retrieval: single
+  queries coalesce into fixed-shape batches and dispatch to ANY search
+  backend — the RAM ``VectorSearchEngine``, the single-store
+  ``DiskVectorSearchEngine``, or the scatter-gather
+  ``ShardedDiskVectorSearchEngine`` — so the disk tier serves the same
+  traffic shape the paper's RAG deployment (§1) generates: many
+  independent callers, one batched index.
 """
 from __future__ import annotations
 
@@ -17,6 +26,82 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
+
+
+class VectorSearchFrontend:
+    """Coalesce single search requests into fixed-shape backend batches.
+
+    The backend's jit cache is keyed on batch shape, so the frontend
+    always dispatches full ``max_batch``-row batches (padding by
+    repeating the last real query; padded lanes are dropped on return —
+    their bucket publishes are harmless duplicates of real traffic).
+    ``submit`` returns a ticket; ``flush`` services every pending ticket
+    in ONE backend search per chunk and returns ``{ticket: (ids,
+    dists)}``.  ``search`` is the batch-in/batch-out convenience used by
+    bulk callers (it also returns the per-chunk SearchStats for I/O
+    attribution).
+    """
+
+    def __init__(self, backend, *, k: int = 10, max_batch: int = 64,
+                 beam_width: Optional[int] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.backend = backend
+        self.k, self.max_batch, self.beam_width = k, max_batch, beam_width
+        self._queue: list[tuple[int, np.ndarray]] = []
+        self._next_ticket = 0
+        self.batches_dispatched = 0
+
+    def submit(self, query: np.ndarray) -> int:
+        q = np.ascontiguousarray(query, np.float32).ravel()
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((ticket, q))
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self) -> dict[int, tuple[np.ndarray, np.ndarray]]:
+        """Serve every queued request; returns {ticket: (ids, dists)}."""
+        out: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        while self._queue:
+            chunk = self._queue[: self.max_batch]
+            self._queue = self._queue[self.max_batch:]
+            qs = np.stack([q for _, q in chunk])
+            pad = self.max_batch - qs.shape[0]
+            if pad:
+                qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
+            ids, dists, _ = self.backend.search(
+                qs, k=self.k, beam_width=self.beam_width)
+            self.batches_dispatched += 1
+            for row, (ticket, _) in enumerate(chunk):
+                out[ticket] = (np.asarray(ids[row]), np.asarray(dists[row]))
+        return out
+
+    def search(self, queries: np.ndarray, k: Optional[int] = None):
+        """Bulk path: chunk a (Q, d) batch through the backend and
+        reassemble — same route the ticketed path takes, minus the queue."""
+        k = k or self.k
+        queries = np.ascontiguousarray(queries, np.float32)
+        if queries.shape[0] == 0:
+            return (np.empty((0, k), np.int32),
+                    np.empty((0, k), np.float32), [])
+        all_ids, all_d, all_stats = [], [], []
+        for lo in range(0, queries.shape[0], self.max_batch):
+            qs = queries[lo: lo + self.max_batch]
+            real = qs.shape[0]
+            pad = self.max_batch - real
+            if pad:
+                qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
+            ids, dists, stats = self.backend.search(
+                qs, k=k, beam_width=self.beam_width)
+            self.batches_dispatched += 1
+            all_ids.append(np.asarray(ids[:real]))
+            all_d.append(np.asarray(dists[:real]))
+            all_stats.append(stats)
+        return (np.concatenate(all_ids), np.concatenate(all_d), all_stats)
 
 
 @dataclasses.dataclass

@@ -10,26 +10,35 @@ This package makes that measurable:
                   accounting and pinning for hot nodes,
 * ``io_engine`` — ``DiskVectorSearchEngine``: PQ codes + adjacency stay
                   device-resident for traversal; full-precision vectors
-                  are read from node blocks through the cache.
+                  are read from node blocks through the cache (one
+                  deduplicated batched fetch per rerank round),
+* ``sharded_store`` — ``ShardedDiskVectorSearchEngine``: scatter-gather
+                  over S independent CTPL shards (one store + cache +
+                  catapult buckets each), thread-pool-overlapped
+                  fetches, manifest-directory persistence.
 
 See FORMAT.md in this directory for the on-disk format specification.
 """
-from repro.store.cache import NodeCache
+from repro.store.cache import CacheStats, NodeCache
 from repro.store.layout import (BlockStore, StoreHeader, block_size_for,
                                 create_store, open_store, write_store)
 
 __all__ = [
-    "BlockStore", "StoreHeader", "NodeCache",
+    "BlockStore", "StoreHeader", "NodeCache", "CacheStats",
     "block_size_for", "create_store", "open_store", "write_store",
-    "DiskVectorSearchEngine",
+    "DiskVectorSearchEngine", "ShardedDiskVectorSearchEngine",
 ]
 
 
 def __getattr__(name):
-    # io_engine imports repro.core (which may itself be mid-import when it
-    # lazily pulls in repro.store.layout for DiskStore) — resolve the
-    # engine class on first touch instead of at package import time.
+    # io_engine/sharded_store import repro.core (which may itself be
+    # mid-import when it lazily pulls in repro.store.layout for DiskStore)
+    # — resolve the engine classes on first touch instead of at package
+    # import time.
     if name == "DiskVectorSearchEngine":
         from repro.store.io_engine import DiskVectorSearchEngine
         return DiskVectorSearchEngine
+    if name == "ShardedDiskVectorSearchEngine":
+        from repro.store.sharded_store import ShardedDiskVectorSearchEngine
+        return ShardedDiskVectorSearchEngine
     raise AttributeError(name)

@@ -22,8 +22,24 @@ blocks on it — only the full-precision rerank does.
 from __future__ import annotations
 
 from collections import deque
+from typing import NamedTuple, Sequence
 
 import numpy as np
+
+
+class CacheStats(NamedTuple):
+    """Global I/O counters, snapshot via ``NodeCache.stats``.
+
+    ``block_reads`` is every load from the store; ``batched_reads`` is
+    the subset issued by deduplicated ``fetch_batch`` calls — comparing
+    the two against a naive per-lane replay is how the prefetcher's I/O
+    win is attributed in fig12.
+    """
+    hits: int
+    misses: int
+    block_reads: int
+    prefetch_batches: int    # fetch_batch calls (one per rerank round)
+    batched_reads: int       # deduplicated loads issued by those calls
 
 
 class NodeCache:
@@ -52,6 +68,8 @@ class NodeCache:
         self.hits = 0
         self.misses = 0
         self.block_reads = 0
+        self.prefetch_batches = 0
+        self.batched_reads = 0
 
     # ------------------------------------------------------------ replacement
     def _victim(self) -> int:
@@ -115,6 +133,51 @@ class NodeCache:
         self.misses += misses
         return out_vec, out_adj, hits, misses
 
+    def fetch_batch(self, requests: Sequence[np.ndarray]
+                    ) -> list[tuple[np.ndarray, np.ndarray, int, int]]:
+        """One deduplicated multi-node fetch servicing many lanes at once
+        — the rerank prefetcher's unit of work (one call per beam round).
+
+        Returns one ``(vectors, adjacency, hits, misses)`` tuple per
+        request, aligned like ``fetch``.  Each distinct node across the
+        whole batch is resolved exactly ONCE: its miss (if any) is
+        charged to the first lane that wants it and counted in
+        ``batched_reads``; every other occurrence is a hit.  This holds
+        under any frame-pool pressure because contents are copied out to
+        all requesting lanes the moment the node's frame resolves — so
+        ``batched_reads`` ≤ the reads a naive per-lane ``fetch`` loop
+        would issue (which re-reads nodes evicted between lanes).
+        """
+        self.prefetch_batches += 1
+        ids = [np.asarray(r).ravel() for r in requests]
+        out = [(np.empty((a.size, self.frame_vec.shape[1]), np.float32),
+                np.empty((a.size, self.frame_adj.shape[1]), np.int32))
+               for a in ids]
+        # node -> every (lane, row) slot wanting it, in arrival order
+        wanted: dict[int, list[tuple[int, int]]] = {}
+        for lane, arr in enumerate(ids):
+            for row, node in enumerate(arr):
+                wanted.setdefault(int(node), []).append((lane, row))
+        hits = np.zeros(len(ids), np.int64)
+        misses = np.zeros(len(ids), np.int64)
+        for node, slots in wanted.items():
+            f = self.frame_of.get(node)
+            if f is None:
+                f = self._load(node)
+                self.batched_reads += 1
+                misses[slots[0][0]] += 1
+                hits[slots[0][0]] -= 1     # first slot below counts as hit
+            else:
+                self.ref[f] = True
+            for lane, row in slots:
+                out[lane][0][row] = self.frame_vec[f]
+                out[lane][1][row] = self.frame_adj[f]
+                hits[lane] += 1
+        self.hits += int(hits.sum())
+        self.misses += int(misses.sum())
+        return [(v, a, int(h), int(m))
+                for (v, a), h, m in zip(out, hits, misses)]
+
     # ------------------------------------------------------------ pinning
     def pin(self, node_ids) -> None:
         """Permanently pin nodes (medoid, label entry points).
@@ -176,6 +239,14 @@ class NodeCache:
 
     def reset_counters(self) -> None:
         self.hits = self.misses = self.block_reads = 0
+        self.prefetch_batches = self.batched_reads = 0
+
+    @property
+    def stats(self) -> CacheStats:
+        return CacheStats(hits=self.hits, misses=self.misses,
+                          block_reads=self.block_reads,
+                          prefetch_batches=self.prefetch_batches,
+                          batched_reads=self.batched_reads)
 
     @property
     def hit_rate(self) -> float:

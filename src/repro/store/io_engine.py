@@ -82,6 +82,10 @@ class DiskVectorSearchEngine(VectorSearchEngine):
             bs.labels[: self.n_active] = self._labels_np[: self.n_active]
         bs.flush(n_active=self.n_active, medoid=self.medoid,
                  has_labels=self.filtered)
+        # persist the build-time codebook (CTPL v2 trailing section):
+        # reopen then traverses with the very same ADC tables, even after
+        # post-build inserts extend the stored vector set
+        bs.write_pq(np.asarray(self._pq.centroids))
         self._open_cache()
         return self
 
@@ -90,18 +94,17 @@ class DiskVectorSearchEngine(VectorSearchEngine):
              **engine_kwargs) -> 'DiskVectorSearchEngine':
         """Reopen a persisted index without rebuilding the graph.
 
-        Auxiliary state (PQ codebook/codes, LSH planes, buckets) is
-        rederived from (seed, stored vectors) — deterministic, so an
-        index persisted at build time reopens to an identically-answering
-        engine.  Caveat: after post-build ``insert()`` the live engine's
-        codebook was trained on the *build-time* vectors only, while a
-        reopen retrains on everything stored — ADC traversal distances
-        can then differ slightly (the full-precision rerank masks this
-        for results, not for hop/IO counts); persisting the codebook is
-        future work (FORMAT.md).  Catapult buckets start empty, exactly
-        like a fresh process (workload state, not index state).
-        Filtered stores need the label-entry table rebuilt and are not
-        yet reloadable.
+        The PQ codebook is read from the CTPL v2 trailing section when
+        present — ADC traversal distances are then byte-identical to the
+        live engine's, including after post-build ``insert()`` (codes
+        re-encode deterministically from the persisted codebook).  A v1
+        file has no codebook section; the codebook then retrains from
+        (seed, stored vectors), which drifts after inserts (legacy
+        behaviour, masked by the full-precision rerank).  Remaining
+        runtime state: LSH planes rederive from seed; catapult buckets
+        start empty, exactly like a fresh process (workload state, not
+        index state).  Filtered stores need the label-entry table rebuilt
+        and are not yet reloadable.
         """
         bs = open_store(store_path)
         if bs.header.has_labels:
@@ -109,7 +112,10 @@ class DiskVectorSearchEngine(VectorSearchEngine):
                 'reopening filtered stores: per-label entry points are not '
                 'persisted yet (FORMAT.md, future work)')
         eng = cls(mode=mode, store_path=store_path, **engine_kwargs)
-        if eng.pq_subspaces is None:
+        codebook = bs.read_pq()
+        if codebook is not None:
+            eng.pq_subspaces = codebook.shape[0]
+        elif eng.pq_subspaces is None:
             eng.pq_subspaces = default_pq_subspaces(bs.header.dim)
         eng.store = DiskStore(bs)
         eng._adj_np = bs.adjacency
@@ -122,7 +128,8 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         eng._tomb_np = np.zeros(bs.capacity, bool)
         eng._tomb_np[bs.n_active:] = True
         eng._init_aux(np.ascontiguousarray(bs.vectors[: bs.n_active],
-                                           np.float32))
+                                           np.float32),
+                      pq_codebook=codebook)
         eng._sync_device()
         eng._open_cache()
         return eng
@@ -193,18 +200,25 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         out_d = np.full((b, k), np.inf, np.float32)
         block_reads = np.zeros(b, np.int32)
         cache_hits = np.zeros(b, np.int32)
+        # DiskANN's per-query I/O: a block per expansion (the adjacency
+        # row lives in it) plus the unexpanded beam tail for rerank.
+        wants = []
         for lane in range(b):
             beam = beam_ids[lane]
-            beam = beam[beam >= 0]
             expanded = trace[lane]
-            expanded = expanded[expanded >= 0]
-            # DiskANN's per-query I/O: a block per expansion (the adjacency
-            # row lives in it) plus the unexpanded beam tail for rerank.
-            want = np.unique(np.concatenate([expanded, beam]))
+            want = np.concatenate([expanded[expanded >= 0],
+                                   beam[beam >= 0]])
+            wants.append(np.unique(want))
+        # One deduplicated multi-node fetch for the whole beam round:
+        # lanes that landed on the same hot blocks share a single load
+        # (batched_reads counts the deduplicated I/O; a node's miss is
+        # charged to the first lane that wanted it).
+        fetched = self._cache.fetch_batch(wants)
+        for lane, (want, (vecs, _, hits, misses)) in enumerate(
+                zip(wants, fetched)):
+            cache_hits[lane], block_reads[lane] = hits, misses
             if want.size == 0:
                 continue
-            vecs, _, hits, misses = self._cache.fetch(want)
-            cache_hits[lane], block_reads[lane] = hits, misses
             # Rerank EVERY fetched block, not just the beam: true neighbors
             # that PQ noise evicted from the beam were still expanded, so
             # their full-precision vectors are already in hand — free

@@ -31,7 +31,7 @@ import os
 import numpy as np
 
 MAGIC = 0x4C505443          # "CTPL" little-endian
-VERSION = 1
+VERSION = 2                 # v2 = v1 + optional trailing PQ codebook section
 SECTOR = 512                # alignment quantum of the node blocks
 HEADER_SIZE = 4096          # one 4 KiB header page
 
@@ -45,6 +45,11 @@ _HEADER_DTYPE = np.dtype([
     ("block_size", "<i4"),
     ("medoid", "<i4"),
     ("has_labels", "<i4"),
+    # v2 additions, carved from the v1 reserved pad (which was required
+    # to be zero — a v1 file therefore reads back as pq_m == pq_k == 0,
+    # i.e. "no PQ section", with no special-casing).
+    ("pq_m", "<i4"),        # PQ subspaces M; 0 = no codebook persisted
+    ("pq_k", "<i4"),        # PQ centroids per subspace K
 ])
 
 
@@ -61,7 +66,16 @@ class StoreHeader:
     block_size: int
     medoid: int = 0
     has_labels: bool = False
+    pq_m: int = 0               # 0 = no PQ codebook section
+    pq_k: int = 0
     version: int = VERSION      # informational; writes always emit VERSION
+
+    @property
+    def pq_bytes(self) -> int:
+        """Size of the trailing PQ codebook section (0 when absent)."""
+        if self.pq_m <= 0:
+            return 0
+        return 4 * self.pq_m * self.pq_k * (self.dim // self.pq_m)
 
     def to_bytes(self) -> bytes:
         rec = np.zeros(1, _HEADER_DTYPE)
@@ -70,6 +84,7 @@ class StoreHeader:
         rec["dim"], rec["degree"] = self.dim, self.degree
         rec["block_size"], rec["medoid"] = self.block_size, self.medoid
         rec["has_labels"] = int(self.has_labels)
+        rec["pq_m"], rec["pq_k"] = self.pq_m, self.pq_k
         raw = rec.tobytes()
         return raw + b"\x00" * (HEADER_SIZE - len(raw))
 
@@ -80,13 +95,15 @@ class StoreHeader:
         rec = np.frombuffer(raw[: _HEADER_DTYPE.itemsize], _HEADER_DTYPE)[0]
         if int(rec["magic"]) != MAGIC:
             raise StoreFormatError(f"bad magic {int(rec['magic']):#x}")
-        if int(rec["version"]) != VERSION:
+        if not 1 <= int(rec["version"]) <= VERSION:
             raise StoreFormatError(
                 f"unsupported version {int(rec['version'])} (have {VERSION})")
         return cls(capacity=int(rec["capacity"]), n_active=int(rec["n_active"]),
                    dim=int(rec["dim"]), degree=int(rec["degree"]),
                    block_size=int(rec["block_size"]), medoid=int(rec["medoid"]),
-                   has_labels=bool(rec["has_labels"]))
+                   has_labels=bool(rec["has_labels"]),
+                   pq_m=int(rec["pq_m"]), pq_k=int(rec["pq_k"]),
+                   version=int(rec["version"]))
 
 
 def block_size_for(dim: int, degree: int) -> int:
@@ -148,6 +165,47 @@ class BlockStore:
                              f"{self.header.capacity}")
         return self._mm[node]
 
+    # ------------------------------------------------------------ PQ section
+    def _pq_offset(self) -> int:
+        return HEADER_SIZE + self.header.capacity * self.header.block_size
+
+    def write_pq(self, centroids: np.ndarray) -> None:
+        """Persist the PQ codebook: (M, K, dim/M) float32 after the blocks.
+
+        Build-time persist so ``load()`` reopens with the exact codebook
+        the live engine traverses with — byte-identical ADC distances
+        even after post-build inserts retrained nothing.
+        """
+        if not self.writable:
+            raise StoreFormatError("store opened read-only")
+        m, k, ds = centroids.shape
+        if m * ds != self.header.dim:
+            raise StoreFormatError(
+                f"codebook geometry ({m}, {k}, {ds}) inconsistent with "
+                f"dim {self.header.dim}")
+        raw = np.ascontiguousarray(centroids, np.dtype("<f4")).tobytes()
+        with open(self.path, "r+b") as f:
+            f.seek(self._pq_offset())
+            f.write(raw)
+            f.truncate(self._pq_offset() + len(raw))
+        self.header.pq_m, self.header.pq_k = m, k
+        with open(self.path, "r+b") as f:
+            f.write(self.header.to_bytes())
+
+    def read_pq(self) -> np.ndarray | None:
+        """The persisted PQ codebook, or None (v1 file / no PQ section)."""
+        h = self.header
+        if h.pq_m <= 0:
+            return None
+        ds = h.dim // h.pq_m
+        with open(self.path, "rb") as f:
+            f.seek(self._pq_offset())
+            raw = f.read(h.pq_bytes)
+        if len(raw) != h.pq_bytes:
+            raise StoreFormatError("truncated PQ codebook section")
+        return np.frombuffer(raw, np.dtype("<f4")).reshape(
+            h.pq_m, h.pq_k, ds).copy()
+
     # ------------------------------------------------------------ durability
     def flush(self, n_active: int | None = None, medoid: int | None = None,
               has_labels: bool | None = None) -> None:
@@ -191,7 +249,8 @@ def open_store(path: str, mode: str = "r+") -> BlockStore:
     """Open an existing store; validates magic, version, and file size."""
     with open(path, "rb") as f:
         header = StoreHeader.from_bytes(f.read(HEADER_SIZE))
-    expect = HEADER_SIZE + header.capacity * header.block_size
+    expect = (HEADER_SIZE + header.capacity * header.block_size
+              + header.pq_bytes)
     actual = os.path.getsize(path)
     if actual != expect:
         raise StoreFormatError(

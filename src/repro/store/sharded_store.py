@@ -1,0 +1,281 @@
+"""ShardedDiskVectorSearchEngine — scatter-gather serving over CTPL shards.
+
+The production shape of the disk tier (ROADMAP "sharded disk stores"):
+the corpus is row-sharded into S independent CTPL block files, each
+served by its own ``DiskVectorSearchEngine`` — one ``DiskStore``, one
+CLOCK ``NodeCache``, and (in catapult mode) one private bucket table per
+shard, exactly the paper's one-instance-per-replica deployment that
+``core/sharded.py`` models on the device mesh.  This module is the
+host/disk counterpart: per-shard searches run concurrently on a thread
+pool (overlapping their block fetches the way independent SSD queue
+pairs would), local results rebase to global row ids and merge with the
+SAME ``rebase_ids``/``merge_topk`` helpers the shard_map path uses — so
+the RAM mesh engine is the semantic reference for this one, and the
+cross-tier parity test (tests/test_sharded_store.py) holds by
+construction rather than by coincidence.
+
+On-disk layout: a directory, not a file —
+
+    <store_dir>/
+        manifest.json           multi-shard manifest (FORMAT.md)
+        shard_0000.ctpl         CTPL v2 block file, shard 0
+        shard_0000.buckets.npz  catapult bucket state, shard 0 (save())
+        shard_0001.ctpl         ...
+
+Global ids are contiguous per shard: shard s owns rows
+``[offsets[s], offsets[s] + capacity_s)``; at build time with no spare
+capacity this makes global ids identical to corpus row order, so
+recall measures directly against brute force on the unsharded corpus.
+
+``save()``/``load()`` round-trip the whole index *including each
+shard's catapult buckets* — unlike a process restart, a planned
+save/restore keeps the workload-adapted hot state, so the first batch
+after reopen catapults exactly like the last batch before.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import buckets as bk
+from repro.core import catapult as cat
+from repro.core.engine import SearchStats
+from repro.core.sharded import merge_topk, rebase_ids
+from repro.core.vamana import VamanaParams
+from repro.store.cache import CacheStats
+from repro.store.io_engine import DiskVectorSearchEngine
+
+MANIFEST_NAME = "manifest.json"
+MANIFEST_FORMAT = "ctpl-sharded"
+MANIFEST_VERSION = 1
+
+
+def _shard_file(s: int) -> str:
+    return f"shard_{s:04d}.ctpl"
+
+
+def _bucket_file(s: int) -> str:
+    return f"shard_{s:04d}.buckets.npz"
+
+
+@dataclasses.dataclass
+class ShardedDiskVectorSearchEngine:
+    """Scatter-gather facade over S disk-resident shard engines."""
+
+    store_dir: str = "index.ctpl.d"
+    n_shards: int = 2
+    mode: str = "catapult"
+    vamana: VamanaParams = dataclasses.field(default_factory=VamanaParams)
+    n_bits: int = 8
+    bucket_capacity: int = 40
+    pq_subspaces: Optional[int] = None
+    seed: int = 0
+    cache_frames: int = 2048          # frames PER SHARD
+    pin_catapult_destinations: bool = True
+    max_workers: Optional[int] = None  # shard-fetch overlap; default = S
+
+    # populated by build()/load()
+    shards: list = dataclasses.field(default_factory=list)
+    offsets: Optional[np.ndarray] = None   # (S+1,) global row offsets
+    n_active: int = 0
+    dim: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {self.n_shards}")
+        if self.mode not in ("catapult", "diskann"):
+            raise ValueError(f"sharded disk engine supports catapult/diskann "
+                             f"modes, got {self.mode!r}")
+        self._pool = None
+
+    # ---------------------------------------------------------------- build
+    def build(self, vectors: np.ndarray) -> "ShardedDiskVectorSearchEngine":
+        """Row-shard ``vectors`` into S contiguous slices and build each
+        shard's graph + store independently (per-shard seed = seed + s,
+        matching ``core.sharded.build_sharded_state``) — build memory
+        scales with the largest shard, not the corpus."""
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        n, d = vectors.shape
+        os.makedirs(self.store_dir, exist_ok=True)
+        bounds = np.linspace(0, n, self.n_shards + 1).astype(np.int64)
+        self.offsets = bounds
+        self.shards = []
+        for s in range(self.n_shards):
+            lo, hi = int(bounds[s]), int(bounds[s + 1])
+            eng = DiskVectorSearchEngine(
+                mode=self.mode,
+                vamana=dataclasses.replace(self.vamana, seed=self.seed + s),
+                n_bits=self.n_bits, bucket_capacity=self.bucket_capacity,
+                pq_subspaces=self.pq_subspaces, seed=self.seed + s,
+                cache_frames=self.cache_frames,
+                pin_catapult_destinations=self.pin_catapult_destinations,
+                store_path=os.path.join(self.store_dir, _shard_file(s)))
+            eng.build(vectors[lo:hi])
+            self.shards.append(eng)
+        self.n_active, self.dim = n, d
+        self._write_manifest()
+        return self
+
+    def _write_manifest(self) -> None:
+        manifest = {
+            "format": MANIFEST_FORMAT,
+            "version": MANIFEST_VERSION,
+            "n_shards": self.n_shards,
+            "dim": self.dim,
+            "mode": self.mode,
+            "seed": self.seed,
+            "n_bits": self.n_bits,
+            "bucket_capacity": self.bucket_capacity,
+            "offsets": [int(o) for o in self.offsets],
+            "shards": [{
+                "file": _shard_file(s),
+                "n_active": int(eng.n_active),
+                "capacity": int(eng.capacity or eng.n_active),
+            } for s, eng in enumerate(self.shards)],
+        }
+        tmp = os.path.join(self.store_dir, MANIFEST_NAME + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1)
+        os.replace(tmp, os.path.join(self.store_dir, MANIFEST_NAME))
+
+    # ---------------------------------------------------------------- search
+    def _executor(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.max_workers or self.n_shards)
+        return self._pool
+
+    def search(self, queries: np.ndarray, k: int,
+               beam_width: int | None = None,
+               max_iters: int | None = None
+               ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
+        """Scatter the batch to every shard, gather + merge global top-k.
+
+        Shard searches run concurrently on the thread pool, so block
+        fetches overlap across shards.  The requested beam is SPLIT
+        across shards (floored at k): every shard still returns k
+        candidates, so the merged pool is S·k ≥ the single-store pool,
+        but the per-shard traversal narrows as S grows — aggregate
+        block reads stay in the single-store regime instead of
+        multiplying by S.  Per-lane stats aggregate over shards:
+        hops/ndists/block_reads/cache_hits sum (total work the query
+        cost the system), used/won OR (any shard's catapult fired).
+        """
+        if not self.shards:
+            raise RuntimeError("build() or load() first")
+        # mirror the single-store default (L ≈ 3k, io_engine.search),
+        # then divide it over the scatter width
+        beam = beam_width or max(3 * k, 24)
+        per_shard_beam = max(k, -(-beam // self.n_shards))
+
+        def one(eng: DiskVectorSearchEngine):
+            return eng.search(queries, k, beam_width=per_shard_beam,
+                              max_iters=max_iters)
+
+        results = list(self._executor().map(one, self.shards))
+        all_ids = np.stack([
+            np.asarray(rebase_ids(ids, int(self.offsets[s])))
+            for s, (ids, _, _) in enumerate(results)])        # (S, B, k)
+        all_d = np.stack([d for _, d, _ in results])           # (S, B, k)
+        merged_ids, merged_d = merge_topk(jnp.asarray(all_ids),
+                                          jnp.asarray(all_d), k)
+        stats = SearchStats(
+            hops=np.sum([st.hops for _, _, st in results], axis=0),
+            ndists=np.sum([st.ndists for _, _, st in results], axis=0),
+            used=np.any([st.used for _, _, st in results], axis=0),
+            won=np.any([st.won for _, _, st in results], axis=0),
+            block_reads=np.sum([st.block_reads for _, _, st in results],
+                               axis=0),
+            cache_hits=np.sum([st.cache_hits for _, _, st in results],
+                              axis=0))
+        return np.asarray(merged_ids), np.asarray(merged_d), stats
+
+    # ---------------------------------------------------------------- I/O
+    @property
+    def cache_stats(self) -> CacheStats:
+        """Aggregate cache counters over every shard's node cache."""
+        per = [eng.cache.stats for eng in self.shards]
+        return CacheStats(*[sum(s[i] for s in per) for i in range(5)])
+
+    def reset_io(self) -> None:
+        for eng in self.shards:
+            eng.reset_io()
+
+    # ---------------------------------------------------------------- persist
+    def save(self) -> None:
+        """Flush every shard + manifest, and snapshot catapult buckets.
+
+        Bucket state is workload state, but a *planned* save/restore
+        (maintenance restart, replica clone) wants it back: the first
+        batch after ``load()`` then catapults exactly like the last
+        batch before ``save()``.
+        """
+        for s, eng in enumerate(self.shards):
+            eng.store.flush(n_active=eng.n_active, medoid=eng.medoid)
+            if self.mode == "catapult":
+                b = eng._cat.buckets
+                np.savez(os.path.join(self.store_dir, _bucket_file(s)),
+                         ids=np.asarray(b.ids), stamp=np.asarray(b.stamp),
+                         tag=np.asarray(b.tag), step=np.asarray(b.step))
+        self._write_manifest()
+
+    @classmethod
+    def load(cls, store_dir: str, mode: str | None = None,
+             **engine_kwargs) -> "ShardedDiskVectorSearchEngine":
+        """Reopen a sharded index from its manifest directory.
+
+        Each shard reopens through ``DiskVectorSearchEngine.load`` (PQ
+        codebook from the CTPL v2 section, graph via memmap) and, when a
+        bucket snapshot exists, restores its catapult table — full
+        round-trip of the serving state.
+        """
+        with open(os.path.join(store_dir, MANIFEST_NAME)) as f:
+            manifest = json.load(f)
+        if manifest.get("format") != MANIFEST_FORMAT:
+            raise ValueError(f"not a sharded CTPL manifest: "
+                             f"{manifest.get('format')!r}")
+        if int(manifest.get("version", 0)) != MANIFEST_VERSION:
+            raise ValueError(f"unsupported manifest version "
+                             f"{manifest.get('version')}")
+        mode = mode or manifest["mode"]
+        self = cls(store_dir=store_dir, n_shards=int(manifest["n_shards"]),
+                   mode=mode, seed=int(manifest["seed"]),
+                   n_bits=int(manifest["n_bits"]),
+                   bucket_capacity=int(manifest["bucket_capacity"]),
+                   **engine_kwargs)
+        self.offsets = np.asarray(manifest["offsets"], np.int64)
+        self.dim = int(manifest["dim"])
+        self.shards = []
+        for s, meta in enumerate(manifest["shards"]):
+            eng = DiskVectorSearchEngine.load(
+                os.path.join(store_dir, meta["file"]), mode=mode,
+                vamana=dataclasses.replace(self.vamana, seed=self.seed + s),
+                n_bits=self.n_bits, bucket_capacity=self.bucket_capacity,
+                seed=self.seed + s, cache_frames=self.cache_frames,
+                pin_catapult_destinations=self.pin_catapult_destinations)
+            bpath = os.path.join(store_dir, _bucket_file(s))
+            if mode == "catapult" and os.path.exists(bpath):
+                with np.load(bpath) as z:
+                    buckets = bk.BucketState(
+                        ids=jnp.asarray(z["ids"]),
+                        stamp=jnp.asarray(z["stamp"]),
+                        tag=jnp.asarray(z["tag"]),
+                        step=jnp.asarray(z["step"]))
+                eng._cat = cat.CatapultState(lsh=eng._cat.lsh,
+                                             buckets=buckets)
+            self.shards.append(eng)
+        self.n_active = sum(eng.n_active for eng in self.shards)
+        return self
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+        for eng in self.shards:
+            eng.close()

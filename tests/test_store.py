@@ -107,6 +107,48 @@ def test_cache_rotating_pins_bounded(tmp_path):
     assert cache.resident == 0 and int(cache.pinned.sum()) == 0
 
 
+def test_fetch_batch_contents_and_attribution(tmp_path):
+    store, vecs, adj = _tiny_store(tmp_path)
+    cache = NodeCache(store, capacity=8)
+    lanes = [np.array([3, 5]), np.array([5, 3, 7]), np.array([], np.int64)]
+    out = cache.fetch_batch(lanes)
+    assert len(out) == 3
+    for lane, (v, a, _, _) in zip(lanes, out):
+        np.testing.assert_array_equal(v, vecs[lane])
+        np.testing.assert_array_equal(a, adj[lane])
+    # misses charged once, to the first lane wanting each node
+    assert (out[0][2], out[0][3]) == (0, 2)     # lane 0: 3, 5 both cold
+    assert (out[1][2], out[1][3]) == (2, 1)     # lane 1: 5, 3 shared; 7 cold
+    assert (out[2][2], out[2][3]) == (0, 0)
+    assert cache.stats.prefetch_batches == 1
+    assert cache.stats.batched_reads == 3       # deduplicated: {3, 5, 7}
+    assert cache.stats.block_reads == 3
+
+
+def test_fetch_batch_dedup_beats_naive_under_pressure(tmp_path):
+    """The prefetcher's claim: one deduplicated multi-node fetch issues
+    no more reads than the per-lane loop — strictly fewer when lanes
+    share blocks and the frame pool thrashes between lanes."""
+    store, vecs, _ = _tiny_store(tmp_path)
+    rng = np.random.default_rng(9)
+    # overlapping lanes over a 12-node hot set, 4-frame cache: the naive
+    # loop re-reads nodes evicted between lanes
+    lanes = [np.sort(rng.choice(12, 6, replace=False)) for _ in range(8)]
+
+    naive_cache = NodeCache(store, capacity=4)
+    naive = sum(naive_cache.fetch(lane)[3] for lane in lanes)
+
+    batch_cache = NodeCache(store, capacity=4)
+    out = batch_cache.fetch_batch(lanes)
+    batched = sum(m for _, _, _, m in out)
+    assert batched == batch_cache.stats.batched_reads
+    assert batched == len({int(x) for lane in lanes for x in lane})
+    assert batched < naive, (batched, naive)
+    # contents stay correct even though the pool is smaller than the batch
+    for lane, (v, _, _, _) in zip(lanes, out):
+        np.testing.assert_array_equal(v, vecs[lane])
+
+
 # ---------------------------------------------------------------- disk engine
 
 def test_disk_engine_recall_parity_with_ram(tmp_store_dir, corpus, queries,
@@ -183,6 +225,44 @@ def test_disk_engine_insert_then_persist(tmp_store_dir):
                                extra, rtol=1e-6)
     ids2, _, _ = re.search(q, k=5)
     np.testing.assert_array_equal(ids, ids2)
+
+
+def test_disk_engine_pq_persisted_byte_identical_after_insert(tmp_store_dir):
+    """CTPL v2: the build-time codebook rides in the file, so a reopen
+    after post-build inserts traverses with byte-identical ADC state
+    (codebook, codes, hence hops) — the FORMAT.md 'Not persisted' fix."""
+    data, _, _ = make_clustered(n=700, d=16, n_clusters=8, seed=5)
+    base, extra = data[:600], data[600:] + 6.0
+    path = str(tmp_store_dir / "pq_persist.ctpl")
+    disk = DiskVectorSearchEngine(
+        mode="diskann", vamana=VPARAMS, capacity=700, cache_frames=128,
+        store_path=path).build(base)
+    disk.insert(extra)
+    q = data[:16] + 0.01
+    ids_a, d_a, st_a = disk.search(q, k=5)
+
+    re = DiskVectorSearchEngine.load(path, mode="diskann", vamana=VPARAMS,
+                                     cache_frames=128)
+    np.testing.assert_array_equal(np.asarray(re._pq.centroids),
+                                  np.asarray(disk._pq.centroids))
+    np.testing.assert_array_equal(re._codes_np, disk._codes_np)
+    ids_b, d_b, st_b = re.search(q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_allclose(d_a, d_b, rtol=1e-6)
+    # same ADC tables => the PQ-steered walk itself is identical
+    np.testing.assert_array_equal(st_a.hops, st_b.hops)
+
+
+def test_store_v1_file_still_opens(tmp_path):
+    """A pre-PQ (v1) header reads back as pq_m == 0 — no codebook section,
+    load() falls back to retraining (legacy behaviour)."""
+    path = str(tmp_path / "v1.ctpl")
+    layout.create_store(path, capacity=4, dim=8, degree=4).flush()
+    with open(path, "r+b") as f:
+        f.seek(4)
+        f.write((1).to_bytes(4, "little"))      # stamp version = 1
+    re = layout.open_store(path)
+    assert re.header.version == 1 and re.read_pq() is None
 
 
 def test_disk_engine_rejects_lsh_apg():
