@@ -119,6 +119,11 @@ def run(n=8_000, n_queries=2_048) -> list[str]:
                         name=f"fig12_disk/{wl.name}/{regime}/{mode}/k{K}"))
                     eng.close()
     out.extend(run_sharded(n=n, n_queries=n_queries))
+    # fig2_disk/*: the mutable-tier story (insert/delete/consolidate
+    # recall + I/O) rides in the same artifact so check_regression can
+    # gate post-delete recall alongside the block-read claims.
+    from benchmarks.bench_dynamic import run_disk
+    out.extend(run_disk(n=min(n, 4_000), n_queries=min(n_queries, 1_024)))
     return out
 
 

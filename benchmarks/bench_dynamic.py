@@ -5,8 +5,23 @@ Protocol (paper §2.3): populate the DB, replay a Zipf query stream; in
 the dynamic run, insert a batch of new vectors every 50 queries.  Report
 median recall static vs. dynamic for the cache, and the same for
 CatapultDB (which must NOT degrade).
+
+``--backend disk`` (``run_disk``) moves the dynamic story to the CTPL
+tier: the same Zipf stream with interleaved ``insert_batch`` /
+``delete`` / ``consolidate`` on a ``DiskVectorSearchEngine``, reporting
+recall at each phase (fresh → post-insert → post-delete →
+post-consolidate) plus mean per-query block reads.  The
+``post_delete_recall`` metric is gated by check_regression.py — a
+regression there means tombstoned nodes are leaking back into results
+or the graph repair is eating recall.
 """
 from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -65,5 +80,87 @@ def run(n=6_000, n_queries=1_000, k=5, batch=50, insert_every=50,
     return out
 
 
+def run_disk(n=4_000, n_queries=1_024, k=8, insert_batch=200,
+             delete_frac=0.08) -> list[str]:
+    """fig2_disk/* — the mutable disk tier under a dynamic Zipf stream.
+
+    Per mode (diskann / catapult): build on disk, replay the stream,
+    then insert a hotspot batch, delete a random slice of the corpus
+    (tombstones, persisted), and consolidate — measuring recall vs the
+    live ground truth and mean block reads after every phase.
+    """
+    wl = make_medrag_zipf(n=n, n_queries=n_queries, d=24)
+    rng = np.random.default_rng(17)
+    q = wl.queries[:256]
+    newv = (q[rng.integers(0, q.shape[0], insert_batch)]
+            + 0.05 * rng.normal(size=(insert_batch, wl.corpus.shape[1]))
+            ).astype(np.float32)
+    n_del = int(n * delete_frac)
+    out = []
+    from repro.store.io_engine import DiskVectorSearchEngine
+    for mode in ("diskann", "catapult"):
+        with tempfile.TemporaryDirectory() as td:
+            eng = DiskVectorSearchEngine(
+                mode=mode, vamana=VP, seed=0, capacity=n + insert_batch,
+                cache_frames=max(256, n // 16),
+                store_path=os.path.join(td, "dyn.ctpl"))
+            eng.build(wl.corpus)
+            eng.search(q, k=k, beam_width=2 * k)      # jit warm-up
+            eng.reset_io()
+
+            def phase():
+                t0 = time.perf_counter()
+                ids, _, st = eng.search(q, k=k, beam_width=2 * k)
+                dt = time.perf_counter() - t0
+                pool = eng._vec_np[: eng.n_active]
+                dead = np.nonzero(eng._tomb_np[: eng.n_active])[0]
+                truth = brute_force_knn(np.asarray(pool), q, k,
+                                        exclude=dead if dead.size else None)
+                leaked = int(np.isin(ids, dead).sum()) if dead.size else 0
+                return (recall_at_k(ids, truth),
+                        float(st.block_reads.mean()), leaked,
+                        dt / q.shape[0] * 1e6)
+
+            r0, b0, _, us = phase()
+            eng.insert_batch(newv)
+            r1, b1, _, _ = phase()
+            dels = rng.choice(n, size=n_del, replace=False)
+            eng.delete(dels)
+            r2, b2, leak2, _ = phase()
+            eng.consolidate()
+            r3, b3, leak3, _ = phase()
+            out.append(
+                f"fig2_disk/{wl.name}/{mode}/k{k},{us:.1f},"
+                f"recall={r0:.3f};post_insert_recall={r1:.3f};"
+                f"post_delete_recall={r2:.3f};"
+                f"post_consolidate_recall={r3:.3f};"
+                f"tombstone_leaks={leak2 + leak3};"
+                f"block_reads={b0:.2f};post_delete_block_reads={b2:.2f};"
+                f"post_consolidate_block_reads={b3:.2f}")
+            eng.close()
+    return out
+
+
+def _main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--backend", choices=("ram", "disk"), default="ram")
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized corpora (matches benchmarks.run --quick)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write structured results (regression gate)")
+    args = p.parse_args()
+    if args.backend == "disk":
+        rows = run_disk(n=3_000 if args.quick else 8_000,
+                        n_queries=512 if args.quick else 2_048)
+    else:
+        rows = run(n=4_000 if args.quick else 6_000,
+                   n_queries=512 if args.quick else 1_000)
+    print("\n".join(rows))
+    if args.json:
+        from benchmarks.bench_disk import rows_to_json
+        with open(args.json, "w") as f:
+            json.dump({"results": rows_to_json(rows)}, f, indent=1)
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    _main()

@@ -1,6 +1,17 @@
 """Paper Fig. 10: filtered queries (Papers workload) — CatapultDB vs
-DiskANN with per-label entry points, sweeping beam width."""
+DiskANN with per-label entry points, sweeping beam width.
+
+``--backend disk`` runs the same sweep on ``DiskVectorSearchEngine``
+(CTPL v3 labeled stores: per-label entry points persisted, filtered
+traversal constrained on device, predicate re-checked at the rerank) —
+rows are suffixed ``fig10_papers_disk/*`` so both tiers can live in one
+report.
+"""
 from __future__ import annotations
+
+import argparse
+import os
+import tempfile
 
 from benchmarks.common import emit, make_engine, stream
 from repro.data.workloads import make_papers
@@ -8,16 +19,28 @@ from repro.data.workloads import make_papers
 K_SWEEP = (1, 4, 8, 16)
 
 
-def run(n=8_000, n_queries=2_048) -> list[str]:
+def run(n=8_000, n_queries=2_048, backend: str = "ram") -> list[str]:
     wl = make_papers(n=n, n_queries=n_queries)
+    prefix = "fig10_papers" if backend == "ram" else "fig10_papers_disk"
     rows = []
-    for mode in ("diskann", "catapult"):
-        eng = make_engine(wl, mode)
-        for k in K_SWEEP:
-            rows.append(stream(eng, wl, k=k,
-                               name=f"fig10_papers/{mode}/k{k}"))
+    with tempfile.TemporaryDirectory() as td:
+        for mode in ("diskann", "catapult"):
+            eng = make_engine(
+                wl, mode, backend=backend,
+                store_path=os.path.join(td, f"{mode}.ctpl")
+                if backend == "disk" else None)
+            for k in K_SWEEP:
+                rows.append(stream(eng, wl, k=k,
+                                   name=f"{prefix}/{mode}/k{k}"))
+            if backend == "disk":
+                eng.close()
     return emit(rows)
 
 
 if __name__ == "__main__":
-    print("\n".join(run()))
+    p = argparse.ArgumentParser()
+    p.add_argument("--backend", choices=("ram", "disk"), default="ram")
+    p.add_argument("--quick", action="store_true")
+    args = p.parse_args()
+    n, nq = (3_000, 512) if args.quick else (8_000, 2_048)
+    print("\n".join(run(n=n, n_queries=nq, backend=args.backend)))

@@ -8,6 +8,9 @@ committed baseline (benchmarks/baselines/disk_quick.json):
   row — the paper's headline I/O claim,
 * ``recall`` must not drop below the committed baseline (minus a 0.005
   float-noise epsilon) on any gated row,
+* mutable-tier gates (fig2_disk rows): ``post_delete_recall`` must not
+  drop below baseline − epsilon, and ``tombstone_leaks`` must be 0 —
+  a leak means a deleted node surfaced in results,
 * cross-shard parity: the S=4 scatter-gather row must match the S=1
   single-store row's recall within 1 point (the fig12_sharded
   acceptance bar), checked on the FRESH run so a sharding regression
@@ -60,6 +63,19 @@ def check(current: dict, baseline: dict) -> list[str]:
             failures.append(
                 f"{name}: recall {c['recall']:.3f} < baseline "
                 f"{b['recall']:.3f} - {RECALL_EPS}")
+        # mutable-tier gates: deletes must not eat recall, and a
+        # tombstoned node in a result set is an outright failure
+        if "post_delete_recall" in b:
+            if c.get("post_delete_recall", 0.0) \
+                    < b["post_delete_recall"] - RECALL_EPS:
+                failures.append(
+                    f"{name}: post_delete_recall "
+                    f"{c.get('post_delete_recall', 0.0):.3f} < baseline "
+                    f"{b['post_delete_recall']:.3f} - {RECALL_EPS}")
+        if c.get("tombstone_leaks", 0.0) > 0:
+            failures.append(
+                f"{name}: {c['tombstone_leaks']:.0f} tombstoned node(s) "
+                f"returned in search results")
 
     # fig12_sharded acceptance: S=4 recall within 1 point of S=1, fresh run
     s_rows = {name: m for name, m in cur.items()

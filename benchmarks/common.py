@@ -50,9 +50,22 @@ def shared_graph(wl: Workload):
 
 
 def make_engine(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
-                seed=0) -> VectorSearchEngine:
-    eng = VectorSearchEngine(mode=mode, vamana=VP, n_bits=n_bits,
-                             bucket_capacity=bucket_capacity, seed=seed)
+                seed=0, backend: str = "ram",
+                store_path: str | None = None) -> VectorSearchEngine:
+    """Engine factory for either tier.  ``backend='disk'`` builds a
+    ``DiskVectorSearchEngine`` on ``store_path`` (required) — the same
+    graph/labels, block-resident, so every benchmark can A/B the tiers
+    with one flag."""
+    if backend == "disk":
+        from repro.store.io_engine import DiskVectorSearchEngine
+        assert store_path is not None, "disk backend needs a store_path"
+        eng = DiskVectorSearchEngine(
+            mode=mode, vamana=VP, n_bits=n_bits,
+            bucket_capacity=bucket_capacity, seed=seed,
+            store_path=store_path)
+    else:
+        eng = VectorSearchEngine(mode=mode, vamana=VP, n_bits=n_bits,
+                                 bucket_capacity=bucket_capacity, seed=seed)
     if wl.labels is not None:
         return eng.build(wl.corpus, labels=wl.labels,
                          n_labels=int(wl.labels.max()) + 1)

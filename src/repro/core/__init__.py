@@ -6,7 +6,8 @@ random-hyperplane LSH, FilteredVamana, FreshVamana insertion, PQ, and
 the evaluated baselines (vanilla DiskANN, LSH-APG, the Proximity cache).
 """
 from repro.core.beam_search import SearchSpec, beam_search, beam_search_l2, l2_dist_fn
-from repro.core.buckets import BucketState, make_buckets, lookup, publish
+from repro.core.buckets import (BucketState, evict_ids, make_buckets, lookup,
+                                publish)
 from repro.core.catapult import CatapultState, catapulted_lookup, make_catapult_state
 from repro.core.engine import (DiskStore, RamStore, SearchStats,
                                VectorSearchEngine, brute_force_knn,
@@ -16,7 +17,7 @@ from repro.core.vamana import VamanaParams, build_vamana, medoid_index, robust_p
 
 __all__ = [
     "SearchSpec", "beam_search", "beam_search_l2", "l2_dist_fn",
-    "BucketState", "make_buckets", "lookup", "publish",
+    "BucketState", "evict_ids", "make_buckets", "lookup", "publish",
     "CatapultState", "catapulted_lookup", "make_catapult_state",
     "SearchStats", "VectorSearchEngine", "brute_force_knn", "recall_at_k",
     "RamStore", "DiskStore",

@@ -91,3 +91,21 @@ def publish(state: BucketState, bucket_idx: jax.Array, dest: jax.Array,
     ids, stamp, tag, step = jax.lax.fori_loop(
         0, bucket_idx.shape[0], one, (state.ids, state.stamp, state.tag, state.step))
     return BucketState(ids=ids, stamp=stamp, tag=tag, step=step)
+
+
+def evict_ids(state: BucketState, dead: jax.Array) -> BucketState:
+    """Clear every bucket entry whose destination is in ``dead``.
+
+    Tombstone deletion's invalidation hook: the LRU refresh would age
+    stale shortcuts out *eventually*, but until then every query hashing
+    to the bucket pays a beam start on a node that can never be a result
+    — and on the disk tier that start is a wasted block read.  One dense
+    ``isin`` sweep drops them immediately (the paper's passive-refresh
+    story is about insertions; deletions get the active flush).
+    """
+    dead = jnp.asarray(dead, jnp.int32).ravel()
+    bad = jnp.isin(state.ids, dead) & (state.ids >= 0)
+    return BucketState(ids=jnp.where(bad, INVALID, state.ids),
+                       stamp=jnp.where(bad, INVALID, state.stamp),
+                       tag=jnp.where(bad, INVALID, state.tag),
+                       step=state.step)

@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import buckets as bk
 from repro.core import catapult as cat
 from repro.core import filters as flt
 from repro.core import insert as ins
@@ -39,7 +40,7 @@ from repro.core import lsh_apg as apg
 from repro.core import pq as pq_mod
 from repro.core.beam_search import (SearchSpec, beam_search, beam_search_l2,
                                     l2_dist_fn)
-from repro.core.vamana import VamanaParams, build_vamana
+from repro.core.vamana import VamanaParams, build_vamana, medoid_index
 
 
 class SearchStats(NamedTuple):
@@ -203,6 +204,7 @@ class VectorSearchEngine:
         # rows >= n are tombstoned until inserted
         self._tomb_np[n:] = True
         self.n_active, self.medoid = n, med
+        self.capacity = cap
 
         self._init_aux(vectors)
         self._sync_device()
@@ -393,7 +395,8 @@ class VectorSearchEngine:
 
     # ---------------------------------------------------------------- updates
     def insert(self, new_vectors: np.ndarray,
-               labels: np.ndarray | None = None) -> None:
+               labels: np.ndarray | None = None) -> np.ndarray:
+        """FreshVamana batch insert; returns the assigned node ids."""
         b = new_vectors.shape[0]
         start = self.n_active
         self.n_active = ins.insert_batch(
@@ -408,10 +411,54 @@ class VectorSearchEngine:
             self._codes_np[start: self.n_active] = np.asarray(
                 pq_mod.encode(self._pq, jnp.asarray(self._vec_np[start: self.n_active])))
         self._sync_device()
+        return np.arange(start, self.n_active, dtype=np.int64)
+
+    def insert_batch(self, new_vectors: np.ndarray,
+                     labels: np.ndarray | None = None) -> np.ndarray:
+        """Alias for :meth:`insert` — the mutable-tier spelling every
+        backend (RAM / disk / sharded-disk) exposes uniformly."""
+        return self.insert(new_vectors, labels)
 
     def delete(self, ids: np.ndarray) -> None:
+        """Tombstone ``ids`` and repair every structure that could still
+        steer a query onto them: catapult buckets are flushed of the dead
+        destinations (a stale shortcut is a wasted beam start — and a
+        wasted block read on disk), and a tombstoned medoid / label entry
+        point is re-elected among the surviving nodes."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64)).ravel()
+        ids = ids[ids >= 0]     # tolerate search()'s -1 padding lanes
+        if ids.size == 0:
+            return
         self._tomb_np = ins.delete(self._tomb_np, ids)
         self._tomb = jnp.asarray(self._tomb_np)
+        if self.mode == 'catapult':
+            self._cat = dataclasses.replace(
+                self._cat,
+                buckets=bk.evict_ids(self._cat.buckets,
+                                     jnp.asarray(ids, jnp.int32)))
+        if self._tomb_np[self.medoid]:
+            self.medoid = self._elect_medoid()
+        if self.filtered:
+            self._label_entry = jnp.asarray(flt.refresh_label_entries(
+                np.asarray(self._label_entry), self._vec_np,
+                self._labels_np, self._tomb_np, self.n_active))
+
+    def _elect_medoid(self) -> int:
+        """Deterministic medoid re-election over the live rows."""
+        live = (~self._tomb_np[: self.n_active]).nonzero()[0]
+        if live.size == 0:
+            return self.medoid
+        return int(live[medoid_index(self._vec_np[live])])
+
+    def consolidate(self) -> int:
+        """Splice tombstoned nodes out of the graph (FreshVamana
+        compaction): live in-neighbors inherit each deleted node's live
+        out-edges under RobustPrune, then the deleted rows disconnect.
+        Node ids stay stable; returns the number of repaired rows."""
+        repaired = ins.consolidate(self._adj_np, self._vec_np,
+                                   self._tomb_np, self.n_active, self.vamana)
+        self._sync_device()
+        return repaired
 
 
 # ---------------------------------------------------------------------------
@@ -425,15 +472,15 @@ def _mk_dist(vec, pq_sub, pqcb, codes):
 
 
 def _masks(tomb, labels, flabels):
+    """Traversal constraints shared by every engine tier (RAM and the
+    disk/sharded paths dispatch through the same jit'd searches): the
+    predicate mask comes from ``filters.make_filter_mask_fn``, the
+    result mask hides tombstoned nodes."""
     def result_mask(ids):
         return ~tomb[jnp.maximum(ids, 0)]
 
-    neighbor_mask = None
-    if labels is not None:
-        def neighbor_mask(lane, ids):
-            f = flabels[lane]
-            ok = (f < 0) | (labels[jnp.maximum(ids, 0)] == f)
-            return ok | (ids < 0)
+    neighbor_mask = (flt.make_filter_mask_fn(labels, flabels)
+                     if labels is not None else None)
     return neighbor_mask, result_mask
 
 

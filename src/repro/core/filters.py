@@ -77,6 +77,29 @@ def build_stitched_graph(vectors: np.ndarray, labels: np.ndarray,
     return out, med, label_entry_points(vectors, labels, n_labels)
 
 
+def refresh_label_entries(entries: np.ndarray, vectors: np.ndarray,
+                          labels: np.ndarray, tombstones: np.ndarray,
+                          n_active: int) -> np.ndarray:
+    """Re-elect per-label entry points whose node was tombstoned.
+
+    A deleted entry point would force every query for that label to
+    start on a node that can never be a result (and, on the disk tier,
+    stays hard-pinned in the node cache).  Labels whose entry is still
+    live are left untouched — entry stability keeps cache pins warm.
+    Labels with no live members keep a degenerate entry of 0; their
+    searches return nothing after masking anyway.
+    """
+    entries = np.asarray(entries, np.int32).copy()
+    for lbl in range(entries.size):
+        e = int(entries[lbl])
+        if 0 <= e < n_active and not tombstones[e]:
+            continue
+        idx = np.nonzero((labels[:n_active] == lbl)
+                         & ~tombstones[:n_active])[0]
+        entries[lbl] = idx[medoid_index(vectors[idx])] if idx.size else 0
+    return entries
+
+
 def make_filter_mask_fn(node_labels, filter_labels):
     """neighbor_mask_fn for beam_search: True keeps the node.
 

@@ -96,3 +96,52 @@ def delete(tombstones: np.ndarray, ids: np.ndarray) -> np.ndarray:
     tombstones = tombstones.copy()
     tombstones[ids] = True
     return tombstones
+
+
+def consolidate(adjacency: np.ndarray, vectors: np.ndarray,
+                tombstones: np.ndarray, n_active: int,
+                params: VamanaParams) -> int:
+    """FreshVamana's consolidation: splice tombstoned nodes out of the graph.
+
+    For every live node ``v`` with an out-edge to a deleted node ``d``,
+    replace that edge with ``d``'s live out-neighborhood and RobustPrune
+    the union back to the degree budget — the deleted node's connectivity
+    role is inherited by its neighbors (FreshDiskANN Algorithm 4).
+    Deleted rows then lose their out-edges entirely: with no in-edges and
+    no out-edges they are fully disconnected, so traversal can never
+    step through (or start from) them again.
+
+    Node ids are STABLE across consolidation: deleted rows are not
+    compacted away, their slots are simply dead.  ``n_active`` therefore
+    never shrinks; the caller's tombstone bitmap keeps marking the rows.
+    Mutates ``adjacency`` in place; returns the number of live nodes
+    whose rows were repaired.
+    """
+    deleted = tombstones[:n_active].nonzero()[0]
+    if deleted.size == 0:
+        return 0
+    dead = np.zeros(adjacency.shape[0], bool)
+    dead[deleted] = True
+    r = adjacency.shape[1]
+    # live nodes pointing at any deleted node
+    live_rows = (~tombstones[:n_active]).nonzero()[0]
+    touches = dead[np.maximum(adjacency[live_rows], 0)] \
+        & (adjacency[live_rows] >= 0)
+    repaired = live_rows[touches.any(axis=1)]
+    for v in repaired:
+        row = adjacency[v]
+        row = row[row >= 0]
+        keep = row[~dead[row]]
+        gone = row[dead[row]]
+        # inherit each deleted neighbor's live out-neighborhood
+        inherit = adjacency[gone].ravel()
+        inherit = inherit[inherit >= 0]
+        inherit = inherit[~dead[inherit] & (inherit != v)]
+        cand = np.unique(np.concatenate([keep, inherit]))
+        adjacency[v] = -1
+        if cand.size:
+            pruned = robust_prune(v, cand, vectors, params.alpha, r)
+            adjacency[v, : pruned.size] = pruned
+    # disconnect the deleted rows themselves
+    adjacency[deleted] = -1
+    return int(repaired.size)

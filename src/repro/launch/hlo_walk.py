@@ -105,12 +105,18 @@ def parse_hlo(text: str) -> tuple[dict, str]:
         shapes[name] = out_shape
 
         if op == "dot":
-            operands = [o.strip().lstrip("%")
-                        for o in rest.split(")")[0].split(",")]
-            lhs = operands[0] if operands else ""
+            # Current XLA prints operands WITH inline shapes —
+            # "dot(f32[128,128]{1,0} %x, ...)" — so parse the lhs shape
+            # straight from the operand text; older name-only text
+            # ("dot(%x, %y)") falls back to the def table.
+            lhs_txt = rest.split(")")[0].split(", ")[0]
             cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
             _, out_dims = _shape_dims(out_shape)
-            _, lhs_dims = _shape_dims(shapes.get(lhs, ""))
+            _, lhs_dims = _shape_dims(lhs_txt)
+            if not lhs_dims:
+                lhs_name = re.search(r"%?([\w\.\-]+)\s*$", lhs_txt)
+                _, lhs_dims = _shape_dims(
+                    shapes.get(lhs_name.group(1), "") if lhs_name else "")
             k = 1
             if cd and lhs_dims:
                 for idx in cd.group(1).split(","):

@@ -15,7 +15,13 @@ This package makes that measurable:
 * ``sharded_store`` — ``ShardedDiskVectorSearchEngine``: scatter-gather
                   over S independent CTPL shards (one store + cache +
                   catapult buckets each), thread-pool-overlapped
-                  fetches, manifest-directory persistence.
+                  fetches, manifest-directory persistence,
+                  least-loaded-shard insert routing + fanned-out
+                  deletes/filtered search.
+
+The tier is mutable (CTPL v3): tombstone bitmaps and per-label entry
+points persist in the block file; insert/delete/consolidate write
+through the cache and survive reopen.
 
 See FORMAT.md in this directory for the on-disk format specification.
 """

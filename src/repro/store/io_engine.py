@@ -86,6 +86,10 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         # reopen then traverses with the very same ADC tables, even after
         # post-build inserts extend the stored vector set
         bs.write_pq(np.asarray(self._pq.centroids))
+        # CTPL v3 mutation state: tombstone bitmap + label entry table
+        bs.write_tombstones(self._tomb_np)
+        if self.filtered:
+            bs.write_label_entries(np.asarray(self._label_entry))
         self._open_cache()
         return self
 
@@ -100,17 +104,20 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         re-encode deterministically from the persisted codebook).  A v1
         file has no codebook section; the codebook then retrains from
         (seed, stored vectors), which drifts after inserts (legacy
-        behaviour, masked by the full-precision rerank).  Remaining
-        runtime state: LSH planes rederive from seed; catapult buckets
-        start empty, exactly like a fresh process (workload state, not
-        index state).  Filtered stores need the label-entry table rebuilt
-        and are not yet reloadable.
+        behaviour, masked by the full-precision rerank).  CTPL v3
+        mutation state round-trips too: the tombstone bitmap (older
+        files derive "rows ≥ n_active are dead") and, for filtered
+        stores, the per-label entry-point table.  Remaining runtime
+        state: LSH planes rederive from seed; catapult buckets start
+        empty, exactly like a fresh process (workload state, not index
+        state).
         """
         bs = open_store(store_path)
-        if bs.header.has_labels:
+        entries = bs.read_label_entries()
+        if bs.header.has_labels and entries is None:
             raise NotImplementedError(
-                'reopening filtered stores: per-label entry points are not '
-                'persisted yet (FORMAT.md, future work)')
+                'labeled store without a label-entry table (pre-v3 file): '
+                'rebuild, or re-save with a v3 writer')
         eng = cls(mode=mode, store_path=store_path, **engine_kwargs)
         codebook = bs.read_pq()
         if codebook is not None:
@@ -120,13 +127,23 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         eng.store = DiskStore(bs)
         eng._adj_np = bs.adjacency
         eng._vec_np = bs.vectors
-        eng._labels_np = None
-        eng._label_entry = None
-        eng.filtered = False
+        eng.filtered = bs.header.has_labels
+        if eng.filtered:
+            eng.n_labels = entries.size
+            eng._label_entry = jnp.asarray(entries)
+            # host copy, not the memmap view: the RAM-path mutation code
+            # owns this array; insert() writes it through to the blocks
+            eng._labels_np = np.array(bs.labels, np.int32)
+        else:
+            eng._labels_np = None
+            eng._label_entry = None
         eng.n_active, eng.medoid = bs.n_active, bs.medoid
         eng.capacity = bs.capacity
-        eng._tomb_np = np.zeros(bs.capacity, bool)
-        eng._tomb_np[bs.n_active:] = True
+        tomb = bs.read_tombstones()
+        if tomb is None:            # pre-v3 file: only "not yet inserted"
+            tomb = np.zeros(bs.capacity, bool)
+            tomb[bs.n_active:] = True
+        eng._tomb_np = tomb.copy()
         eng._init_aux(np.ascontiguousarray(bs.vectors[: bs.n_active],
                                            np.float32),
                       pq_codebook=codebook)
@@ -259,18 +276,69 @@ class DiskVectorSearchEngine(VectorSearchEngine):
 
     # ------------------------------------------------------------- updates
     def insert(self, new_vectors: np.ndarray,
-               labels: np.ndarray | None = None) -> None:
+               labels: np.ndarray | None = None) -> np.ndarray:
+        """Write-through FreshVamana insert into the preallocated block
+        region; returns the assigned node ids."""
         start = self.n_active
-        super().insert(new_vectors, labels)   # writes memmap pages + flush
+        ids = super().insert(new_vectors, labels)  # memmap surgery in place
         bs = self.store.block_store
         if self.filtered:
             bs.labels[start: self.n_active] = \
                 self._labels_np[start: self.n_active]
         bs.flush(n_active=self.n_active, medoid=self.medoid)
+        if bs.header.has_tombs:
+            # the persisted bitmap still marks the new rows dead
+            bs.write_tombstones(self._tomb_np)
         # insert surgery rewrites back-edges of existing nodes — cached
         # frames may hold stale adjacency; drop them and re-pin
         self._cache.invalidate()
         self._repin()
+        return ids
+
+    def delete(self, ids: np.ndarray) -> None:
+        """Tombstone delete, persisted: the CTPL v3 bitmap is rewritten,
+        the (possibly re-elected) medoid and label entry points hit the
+        header/tail, and the bucket flush in the base class guarantees no
+        catapult can land a query on a dead block."""
+        super().delete(ids)      # tombstones + bucket flush + re-elections
+        bs = self.store.block_store
+        bs.write_tombstones(self._tomb_np)
+        bs.flush(medoid=self.medoid)
+        if self.filtered:
+            bs.write_label_entries(np.asarray(self._label_entry))
+        self._repin()            # the re-elected medoid/entries stay hot
+
+    def consolidate(self) -> int:
+        """Compaction pass: graph repair (in place, through the memmap
+        views) + scrub of the tombstoned blocks, all persisted.
+
+        Invariants (FORMAT.md "Consolidation"): node ids stay stable,
+        ``n_active`` never shrinks, deleted rows end fully disconnected
+        with vector zeroed and label cleared — their PQ codes are
+        unreachable garbage, never consulted again.
+        """
+        repaired = super().consolidate()
+        bs = self.store.block_store
+        deleted = self._tomb_np[: self.n_active].nonzero()[0]
+        if deleted.size:
+            bs.vectors[deleted] = 0.0
+            bs.labels[deleted] = -1
+        bs.flush(n_active=self.n_active, medoid=self.medoid)
+        bs.write_tombstones(self._tomb_np)
+        # adjacency rows were rewritten wholesale — drop stale frames
+        self._cache.invalidate()
+        self._repin()
+        return repaired
+
+    def save(self) -> None:
+        """Flush every persisted structure: blocks, header, tombstone
+        bitmap, and (filtered stores) the label entry table."""
+        bs = self.store.block_store
+        bs.flush(n_active=self.n_active, medoid=self.medoid,
+                 has_labels=self.filtered)
+        bs.write_tombstones(self._tomb_np)
+        if self.filtered:
+            bs.write_label_entries(np.asarray(self._label_entry))
 
     def close(self) -> None:
         self.store.close()

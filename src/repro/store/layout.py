@@ -18,6 +18,12 @@ needed to reconstruct the node dtype: capacity, n_active, dim, degree,
 block_size, medoid, has_labels.  ``open_store`` refuses unknown magic or
 versions — see FORMAT.md for the versioning policy.
 
+Trailing sections (after the last block, dense, in order): the PQ
+codebook (v2), the tombstone bitmap and the per-label entry-point table
+(v3).  Absent sections have zero size; v1/v2 files read back as "no
+tombstones / no labels" because the v3 header fields land in the older
+versions' mandatory-zero pad.
+
 Memmap views are the write path too: ``BlockStore.vectors`` /
 ``.adjacency`` are strided ndarray views into the block file, so the
 host-side graph surgery of build/insert mutates disk pages in place and
@@ -31,7 +37,7 @@ import os
 import numpy as np
 
 MAGIC = 0x4C505443          # "CTPL" little-endian
-VERSION = 2                 # v2 = v1 + optional trailing PQ codebook section
+VERSION = 3                 # v3 = v2 + tombstone bitmap + label entry table
 SECTOR = 512                # alignment quantum of the node blocks
 HEADER_SIZE = 4096          # one 4 KiB header page
 
@@ -50,6 +56,11 @@ _HEADER_DTYPE = np.dtype([
     # i.e. "no PQ section", with no special-casing).
     ("pq_m", "<i4"),        # PQ subspaces M; 0 = no codebook persisted
     ("pq_k", "<i4"),        # PQ centroids per subspace K
+    # v3 additions, same carve-from-zero-pad trick: a v1/v2 file reads
+    # back as has_tombs == n_label_entries == 0 — "no tombstone bitmap /
+    # no label entry table" — with no version special-casing.
+    ("has_tombs", "<i4"),        # 1 = tombstone bitmap section present
+    ("n_label_entries", "<i4"),  # per-label entry points persisted; 0 = none
 ])
 
 
@@ -68,6 +79,8 @@ class StoreHeader:
     has_labels: bool = False
     pq_m: int = 0               # 0 = no PQ codebook section
     pq_k: int = 0
+    has_tombs: bool = False     # v3: tombstone bitmap section present
+    n_label_entries: int = 0    # v3: per-label entry points persisted
     version: int = VERSION      # informational; writes always emit VERSION
 
     @property
@@ -77,6 +90,23 @@ class StoreHeader:
             return 0
         return 4 * self.pq_m * self.pq_k * (self.dim // self.pq_m)
 
+    @property
+    def tomb_bytes(self) -> int:
+        """Size of the tombstone bitmap section: one bit per block."""
+        if not self.has_tombs:
+            return 0
+        return (self.capacity + 7) // 8
+
+    @property
+    def label_entry_bytes(self) -> int:
+        """Size of the per-label entry-point table (i32 per label)."""
+        return 4 * self.n_label_entries
+
+    @property
+    def tail_bytes(self) -> int:
+        """Total size of every trailing section after the node blocks."""
+        return self.pq_bytes + self.tomb_bytes + self.label_entry_bytes
+
     def to_bytes(self) -> bytes:
         rec = np.zeros(1, _HEADER_DTYPE)
         rec["magic"], rec["version"] = MAGIC, VERSION
@@ -85,6 +115,8 @@ class StoreHeader:
         rec["block_size"], rec["medoid"] = self.block_size, self.medoid
         rec["has_labels"] = int(self.has_labels)
         rec["pq_m"], rec["pq_k"] = self.pq_m, self.pq_k
+        rec["has_tombs"] = int(self.has_tombs)
+        rec["n_label_entries"] = self.n_label_entries
         raw = rec.tobytes()
         return raw + b"\x00" * (HEADER_SIZE - len(raw))
 
@@ -103,6 +135,8 @@ class StoreHeader:
                    block_size=int(rec["block_size"]), medoid=int(rec["medoid"]),
                    has_labels=bool(rec["has_labels"]),
                    pq_m=int(rec["pq_m"]), pq_k=int(rec["pq_k"]),
+                   has_tombs=bool(rec["has_tombs"]),
+                   n_label_entries=int(rec["n_label_entries"]),
                    version=int(rec["version"]))
 
 
@@ -165,9 +199,44 @@ class BlockStore:
                              f"{self.header.capacity}")
         return self._mm[node]
 
-    # ------------------------------------------------------------ PQ section
-    def _pq_offset(self) -> int:
+    # ----------------------------------------------------- trailing sections
+    # v2/v3 tail layout, immediately after the last node block:
+    #     [PQ codebook][tombstone bitmap][label entry table]
+    # Sections are dense (no gaps); absent sections have zero size.  Any
+    # single-section write rewrites the whole tail, preserving siblings —
+    # section sizes shift when an earlier section appears or resizes.
+
+    def _tail_offset(self) -> int:
         return HEADER_SIZE + self.header.capacity * self.header.block_size
+
+    def _read_tail_raw(self) -> tuple[bytes, bytes, bytes]:
+        """Raw (pq, tombs, label_entries) section bytes currently on disk."""
+        h = self.header
+        with open(self.path, "rb") as f:
+            f.seek(self._tail_offset())
+            raw = f.read(h.tail_bytes)
+        if len(raw) != h.tail_bytes:
+            raise StoreFormatError("truncated trailing sections")
+        p, t = h.pq_bytes, h.pq_bytes + h.tomb_bytes
+        return raw[:p], raw[p:t], raw[t:]
+
+    def _write_tail(self, pq: bytes, tombs: bytes, entries: bytes) -> None:
+        """Write all three trailing sections and re-stamp the header.
+
+        Callers read the current tail (under the OLD header geometry),
+        update the header fields sizing their section, then hand every
+        section's bytes here — earlier sections resizing shift the later
+        ones, so the whole tail always rewrites together.
+        """
+        if not self.writable:
+            raise StoreFormatError("store opened read-only")
+        off = self._tail_offset()
+        with open(self.path, "r+b") as f:
+            f.seek(off)
+            f.write(pq + tombs + entries)
+            f.truncate(off + len(pq) + len(tombs) + len(entries))
+            f.seek(0)
+            f.write(self.header.to_bytes())
 
     def write_pq(self, centroids: np.ndarray) -> None:
         """Persist the PQ codebook: (M, K, dim/M) float32 after the blocks.
@@ -176,35 +245,72 @@ class BlockStore:
         the live engine traverses with — byte-identical ADC distances
         even after post-build inserts retrained nothing.
         """
-        if not self.writable:
-            raise StoreFormatError("store opened read-only")
         m, k, ds = centroids.shape
         if m * ds != self.header.dim:
             raise StoreFormatError(
                 f"codebook geometry ({m}, {k}, {ds}) inconsistent with "
                 f"dim {self.header.dim}")
         raw = np.ascontiguousarray(centroids, np.dtype("<f4")).tobytes()
-        with open(self.path, "r+b") as f:
-            f.seek(self._pq_offset())
-            f.write(raw)
-            f.truncate(self._pq_offset() + len(raw))
+        _, tombs, entries = self._read_tail_raw()
         self.header.pq_m, self.header.pq_k = m, k
-        with open(self.path, "r+b") as f:
-            f.write(self.header.to_bytes())
+        self._write_tail(raw, tombs, entries)
 
     def read_pq(self) -> np.ndarray | None:
         """The persisted PQ codebook, or None (v1 file / no PQ section)."""
         h = self.header
         if h.pq_m <= 0:
             return None
-        ds = h.dim // h.pq_m
-        with open(self.path, "rb") as f:
-            f.seek(self._pq_offset())
-            raw = f.read(h.pq_bytes)
-        if len(raw) != h.pq_bytes:
-            raise StoreFormatError("truncated PQ codebook section")
+        raw, _, _ = self._read_tail_raw()
         return np.frombuffer(raw, np.dtype("<f4")).reshape(
-            h.pq_m, h.pq_k, ds).copy()
+            h.pq_m, h.pq_k, h.dim // h.pq_m).copy()
+
+    def write_tombstones(self, tombstones: np.ndarray) -> None:
+        """Persist the tombstone bitmap: one bit per block, LSB-first.
+
+        ``tombstones`` is a (capacity,) bool array; rows ≥ ``n_active``
+        (not-yet-inserted) are conventionally True but the bitmap is
+        stored verbatim — readers reconstruct whatever was live.
+        """
+        tombstones = np.asarray(tombstones, bool).ravel()
+        if tombstones.size != self.header.capacity:
+            raise StoreFormatError(
+                f"tombstone bitmap length {tombstones.size} != capacity "
+                f"{self.header.capacity}")
+        raw = np.packbits(tombstones, bitorder="little").tobytes()
+        pq, _, entries = self._read_tail_raw()
+        self.header.has_tombs = True
+        self._write_tail(pq, raw, entries)
+
+    def read_tombstones(self) -> np.ndarray | None:
+        """The persisted tombstone bitmap as (capacity,) bool, or None
+        (v1/v2 file / never persisted — caller derives from n_active)."""
+        h = self.header
+        if not h.has_tombs:
+            return None
+        _, raw, _ = self._read_tail_raw()
+        bits = np.unpackbits(np.frombuffer(raw, np.uint8),
+                             bitorder="little")
+        return bits[: h.capacity].astype(bool)
+
+    def write_label_entries(self, entries: np.ndarray) -> None:
+        """Persist the per-label entry-point table: (n_labels,) int32.
+
+        Entry ``l`` is the node id filtered traversal starts from for
+        label ``l`` (FilteredVamana's per-label medoid).
+        """
+        raw = np.ascontiguousarray(entries, np.dtype("<i4")).tobytes()
+        pq, tombs, _ = self._read_tail_raw()
+        self.header.n_label_entries = int(np.asarray(entries).size)
+        self._write_tail(pq, tombs, raw)
+
+    def read_label_entries(self) -> np.ndarray | None:
+        """The persisted label entry table as (n_labels,) int32, or None
+        (v1/v2 file / unlabeled store)."""
+        h = self.header
+        if h.n_label_entries <= 0:
+            return None
+        _, _, raw = self._read_tail_raw()
+        return np.frombuffer(raw, np.dtype("<i4")).astype(np.int32)
 
     # ------------------------------------------------------------ durability
     def flush(self, n_active: int | None = None, medoid: int | None = None,
@@ -250,7 +356,7 @@ def open_store(path: str, mode: str = "r+") -> BlockStore:
     with open(path, "rb") as f:
         header = StoreHeader.from_bytes(f.read(HEADER_SIZE))
     expect = (HEADER_SIZE + header.capacity * header.block_size
-              + header.pq_bytes)
+              + header.tail_bytes)
     actual = os.path.getsize(path)
     if actual != expect:
         raise StoreFormatError(

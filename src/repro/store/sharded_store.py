@@ -31,6 +31,14 @@ recall measures directly against brute force on the unsharded corpus.
 shard's catapult buckets* — unlike a process restart, a planned
 save/restore keeps the workload-adapted hot state, so the first batch
 after reopen catapults exactly like the last batch before.
+
+The tier is mutable end-to-end (CTPL v3): ``insert_batch`` routes new
+vectors to the least-loaded shard (most free preallocated capacity —
+build with ``spare_capacity``), ``delete`` fans tombstones out to the
+owning shards (persisted per shard in the v3 bitmap), ``consolidate``
+runs every shard's compaction pass, and filtered searches fan out
+against each shard's persisted per-label entry points.  Global ids are
+capacity-ranged per shard and stable across all of it.
 """
 from __future__ import annotations
 
@@ -85,6 +93,8 @@ class ShardedDiskVectorSearchEngine:
     offsets: Optional[np.ndarray] = None   # (S+1,) global row offsets
     n_active: int = 0
     dim: int = 0
+    filtered: bool = False
+    n_labels: int = 0
 
     def __post_init__(self) -> None:
         if self.n_shards < 1:
@@ -95,28 +105,54 @@ class ShardedDiskVectorSearchEngine:
         self._pool = None
 
     # ---------------------------------------------------------------- build
-    def build(self, vectors: np.ndarray) -> "ShardedDiskVectorSearchEngine":
+    def build(self, vectors: np.ndarray, labels: np.ndarray | None = None,
+              n_labels: int | None = None,
+              spare_capacity: int = 0) -> "ShardedDiskVectorSearchEngine":
         """Row-shard ``vectors`` into S contiguous slices and build each
         shard's graph + store independently (per-shard seed = seed + s,
         matching ``core.sharded.build_sharded_state``) — build memory
-        scales with the largest shard, not the corpus."""
+        scales with the largest shard, not the corpus.
+
+        ``labels``/``n_labels`` build each shard filtered (stitched
+        graph + per-label entry points over the shard's slice).
+        ``spare_capacity`` preallocates that many EXTRA rows in total,
+        split evenly over the shards, so ``insert_batch`` has block
+        space to route into.  Global ids are capacity-ranged: shard
+        ``s`` owns ``[offsets[s], offsets[s] + capacity_s)``; with no
+        spare this reduces to corpus row order.
+        """
         vectors = np.ascontiguousarray(vectors, np.float32)
         n, d = vectors.shape
+        self.filtered = labels is not None
+        if self.filtered:
+            assert n_labels is not None
+            self.n_labels = int(n_labels)
         os.makedirs(self.store_dir, exist_ok=True)
         bounds = np.linspace(0, n, self.n_shards + 1).astype(np.int64)
-        self.offsets = bounds
+        # every requested spare slot materializes: the first
+        # (spare_capacity mod S) shards absorb the remainder
+        spare = np.full(self.n_shards, spare_capacity // self.n_shards,
+                        np.int64)
+        spare[: spare_capacity % self.n_shards] += 1
+        self.offsets = np.zeros(self.n_shards + 1, np.int64)
         self.shards = []
         for s in range(self.n_shards):
             lo, hi = int(bounds[s]), int(bounds[s + 1])
+            cap = hi - lo + int(spare[s])
+            self.offsets[s + 1] = self.offsets[s] + cap
             eng = DiskVectorSearchEngine(
                 mode=self.mode,
                 vamana=dataclasses.replace(self.vamana, seed=self.seed + s),
                 n_bits=self.n_bits, bucket_capacity=self.bucket_capacity,
                 pq_subspaces=self.pq_subspaces, seed=self.seed + s,
-                cache_frames=self.cache_frames,
+                cache_frames=self.cache_frames, capacity=cap,
                 pin_catapult_destinations=self.pin_catapult_destinations,
                 store_path=os.path.join(self.store_dir, _shard_file(s)))
-            eng.build(vectors[lo:hi])
+            if self.filtered:
+                eng.build(vectors[lo:hi], labels=labels[lo:hi],
+                          n_labels=self.n_labels)
+            else:
+                eng.build(vectors[lo:hi])
             self.shards.append(eng)
         self.n_active, self.dim = n, d
         self._write_manifest()
@@ -132,6 +168,8 @@ class ShardedDiskVectorSearchEngine:
             "seed": self.seed,
             "n_bits": self.n_bits,
             "bucket_capacity": self.bucket_capacity,
+            "filtered": self.filtered,
+            "n_labels": self.n_labels,
             "offsets": [int(o) for o in self.offsets],
             "shards": [{
                 "file": _shard_file(s),
@@ -153,6 +191,7 @@ class ShardedDiskVectorSearchEngine:
 
     def search(self, queries: np.ndarray, k: int,
                beam_width: int | None = None,
+               filter_labels: np.ndarray | None = None,
                max_iters: int | None = None
                ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
         """Scatter the batch to every shard, gather + merge global top-k.
@@ -166,6 +205,11 @@ class ShardedDiskVectorSearchEngine:
         multiplying by S.  Per-lane stats aggregate over shards:
         hops/ndists/block_reads/cache_hits sum (total work the query
         cost the system), used/won OR (any shard's catapult fired).
+
+        Filtered queries (``filter_labels``, -1 = unfiltered lane) fan
+        out unchanged: every shard constrains its own traversal via its
+        per-label entry points, and the merge keeps the global top-k of
+        the predicate-satisfying union.
         """
         if not self.shards:
             raise RuntimeError("build() or load() first")
@@ -176,6 +220,7 @@ class ShardedDiskVectorSearchEngine:
 
         def one(eng: DiskVectorSearchEngine):
             return eng.search(queries, k, beam_width=per_shard_beam,
+                              filter_labels=filter_labels,
                               max_iters=max_iters)
 
         results = list(self._executor().map(one, self.shards))
@@ -195,6 +240,56 @@ class ShardedDiskVectorSearchEngine:
             cache_hits=np.sum([st.cache_hits for _, _, st in results],
                               axis=0))
         return np.asarray(merged_ids), np.asarray(merged_d), stats
+
+    # ---------------------------------------------------------------- updates
+    def _shard_of(self, global_ids: np.ndarray) -> np.ndarray:
+        return (np.searchsorted(self.offsets, global_ids, side="right")
+                - 1).astype(np.int64)
+
+    def insert_batch(self, new_vectors: np.ndarray,
+                     labels: np.ndarray | None = None) -> np.ndarray:
+        """Route inserts to the least-loaded shard; returns global ids.
+
+        "Least-loaded" = most free preallocated block capacity, so a
+        stream of inserts levels the shards instead of piling onto one.
+        A batch larger than any single shard's headroom splits greedily
+        across shards in input order.  Build with ``spare_capacity`` (or
+        per-shard ``capacity``) to have headroom at all.
+        """
+        vectors = np.ascontiguousarray(new_vectors, np.float32)
+        b = vectors.shape[0]
+        out = np.empty(b, np.int64)
+        pos = 0
+        while pos < b:
+            free = np.array([(e.capacity or e.n_active) - e.n_active
+                             for e in self.shards])
+            s = int(np.argmax(free))
+            if free[s] <= 0:
+                raise RuntimeError(
+                    "every shard is at capacity; rebuild with spare_capacity")
+            take = min(int(free[s]), b - pos)
+            chunk_labels = (labels[pos: pos + take]
+                            if labels is not None else None)
+            local = self.shards[s].insert_batch(vectors[pos: pos + take],
+                                                chunk_labels)
+            out[pos: pos + take] = local + int(self.offsets[s])
+            pos += take
+        self.n_active += b
+        self._write_manifest()
+        return out
+
+    def delete(self, global_ids: np.ndarray) -> None:
+        """Fan tombstone deletes out to the owning shards."""
+        gids = np.atleast_1d(np.asarray(global_ids, np.int64)).ravel()
+        gids = gids[gids >= 0]  # tolerate search()'s -1 padding lanes
+        shard_of = self._shard_of(gids)
+        for s in np.unique(shard_of):
+            self.shards[int(s)].delete(gids[shard_of == s]
+                                       - int(self.offsets[int(s)]))
+
+    def consolidate(self) -> int:
+        """Run every shard's compaction pass; returns total repaired rows."""
+        return sum(eng.consolidate() for eng in self.shards)
 
     # ---------------------------------------------------------------- I/O
     @property
@@ -217,7 +312,7 @@ class ShardedDiskVectorSearchEngine:
         batch before ``save()``.
         """
         for s, eng in enumerate(self.shards):
-            eng.store.flush(n_active=eng.n_active, medoid=eng.medoid)
+            eng.save()      # header + tombstone bitmap + label entries
             if self.mode == "catapult":
                 b = eng._cat.buckets
                 np.savez(os.path.join(self.store_dir, _bucket_file(s)),
@@ -251,6 +346,8 @@ class ShardedDiskVectorSearchEngine:
                    **engine_kwargs)
         self.offsets = np.asarray(manifest["offsets"], np.int64)
         self.dim = int(manifest["dim"])
+        self.filtered = bool(manifest.get("filtered", False))
+        self.n_labels = int(manifest.get("n_labels", 0))
         self.shards = []
         for s, meta in enumerate(manifest["shards"]):
             eng = DiskVectorSearchEngine.load(

@@ -85,3 +85,20 @@ def test_memory_cost_matches_paper():
     """b=40, L=8 -> 40 KiB of id data (paper §3.2 'Negligible storage')."""
     state = bk.make_buckets(2 ** 8, 40)
     assert state.ids.size * 4 == 40 * 1024
+
+
+def test_evict_ids_flushes_dead_destinations():
+    """Tombstone-delete invalidation: dead ids vanish from every bucket,
+    live entries (and the LRU clock) are untouched."""
+    state = bk.make_buckets(4, 3)
+    h = jnp.asarray([0, 0, 1, 2], jnp.int32)
+    d = jnp.asarray([10, 11, 10, 12], jnp.int32)
+    state = bk.publish(state, h, d, jnp.full((4,), -1, jnp.int32))
+    step_before = int(state.step)
+    state = bk.evict_ids(state, jnp.asarray([10], jnp.int32))
+    ids = np.asarray(state.ids)
+    assert not (ids == 10).any(), "dead destination survived eviction"
+    assert (ids == 11).any() and (ids == 12).any(), "live entry lost"
+    assert int(state.step) == step_before
+    # stamps of cleared slots are reset so they evict first on reuse
+    assert np.asarray(state.stamp)[ids == -1].max(initial=-1) == -1

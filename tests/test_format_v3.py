@@ -1,0 +1,205 @@
+"""Property-based CTPL v3 format tests: mutation-state round-trips.
+
+Hypothesis (or the dependency-free shim) drives arbitrary tombstone
+bitmaps and label entry tables through save/reopen and asserts
+
+* byte-identical round-trips — the arrays read back exactly, and
+  rewriting the same state produces an identical file (no hidden
+  nondeterminism in the tail encoding),
+* section independence — rewriting any one trailing section preserves
+  the other two even as offsets shift,
+* backward compatibility — v1/v2 fixture files (version stamped down,
+  v3 header fields zero) still open, report "no tombstones / no label
+  entries", and keep their ``has_labels`` semantics unchanged.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import tempfile
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:             # optional dep — fall back to the local shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.store import layout
+
+
+def _mk_store(tmp, capacity, dim=8, degree=4, tag="s"):
+    path = os.path.join(str(tmp), f"{tag}.ctpl")
+    store = layout.create_store(path, capacity=capacity, dim=dim,
+                                degree=degree)
+    store.flush(n_active=capacity)
+    return path, store
+
+
+def _digest(path):
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+@given(st.integers(1, 300), st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_tombstone_bitmap_roundtrips_byte_identical(capacity, seed):
+    rng = np.random.default_rng(seed)
+    tomb = rng.random(capacity) < rng.random()     # arbitrary density
+    with tempfile.TemporaryDirectory() as td:
+        _run_tombstone_roundtrip(td, capacity, tomb)
+
+
+def _run_tombstone_roundtrip(td, capacity, tomb):
+    path, store = _mk_store(td, capacity, tag="t")
+    store.write_tombstones(tomb)
+    store.close()
+    first = _digest(path)
+
+    re = layout.open_store(path)
+    got = re.read_tombstones()
+    np.testing.assert_array_equal(got, tomb)
+    assert got.dtype == bool and got.size == capacity
+    # writing back the identical state must reproduce the identical file
+    re.write_tombstones(got)
+    re.close()
+    assert _digest(path) == first
+
+
+@given(st.lists(st.integers(0, 2 ** 20), min_size=1, max_size=64),
+       st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_label_entry_table_roundtrips_byte_identical(entries, seed):
+    ent = np.asarray(entries, np.int32)
+    with tempfile.TemporaryDirectory() as td:
+        _run_label_roundtrip(td, ent)
+
+
+def _run_label_roundtrip(td, ent):
+    path, store = _mk_store(td, 16, tag="l")
+    store.write_label_entries(ent)
+    store.close()
+    first = _digest(path)
+
+    re = layout.open_store(path)
+    got = re.read_label_entries()
+    np.testing.assert_array_equal(got, ent)
+    assert got.dtype == np.int32
+    re.write_label_entries(got)
+    re.close()
+    assert _digest(path) == first
+
+
+@given(st.integers(2, 128), st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_tail_sections_coexist_through_any_rewrite(capacity, seed):
+    """PQ codebook + tombstones + label entries survive each other's
+    rewrites — section offsets shift, contents must not."""
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as td:
+        _run_coexist(td, capacity, rng)
+
+
+def _run_coexist(td, capacity, rng):
+    path, store = _mk_store(td, capacity, dim=8, tag="c")
+    cb = rng.normal(size=(2, 4, 4)).astype(np.float32)
+    tomb = rng.random(capacity) < 0.5
+    ent = rng.integers(0, capacity, rng.integers(1, 9)).astype(np.int32)
+    store.write_tombstones(tomb)
+    store.write_label_entries(ent)
+    store.write_pq(cb)          # PQ lands FIRST in the tail: siblings shift
+    store.close()
+
+    re = layout.open_store(path)
+    np.testing.assert_array_equal(re.read_pq(), cb)
+    np.testing.assert_array_equal(re.read_tombstones(), tomb)
+    np.testing.assert_array_equal(re.read_label_entries(), ent)
+    # resize the label table (earlier sections keep, file stays openable)
+    ent2 = np.concatenate([ent, ent]).astype(np.int32)
+    re.write_label_entries(ent2)
+    re.close()
+    re2 = layout.open_store(path)
+    np.testing.assert_array_equal(re2.read_pq(), cb)
+    np.testing.assert_array_equal(re2.read_tombstones(), tomb)
+    np.testing.assert_array_equal(re2.read_label_entries(), ent2)
+    re2.close()
+
+
+def _stamp_version(path, version):
+    with open(path, "r+b") as f:
+        f.seek(4)
+        f.write(int(version).to_bytes(4, "little"))
+
+
+def test_v1_fixture_opens_with_empty_mutation_state(tmp_path):
+    path, store = _mk_store(tmp_path, 8, tag="v1")
+    store.close()
+    _stamp_version(path, 1)
+    re = layout.open_store(path)
+    assert re.header.version == 1
+    assert re.read_pq() is None
+    assert re.read_tombstones() is None
+    assert re.read_label_entries() is None
+    assert not re.header.has_labels
+    re.close()
+
+
+def test_v2_fixture_keeps_pq_and_reads_no_tombstones(tmp_path):
+    rng = np.random.default_rng(0)
+    path, store = _mk_store(tmp_path, 8, dim=8, tag="v2")
+    cb = rng.normal(size=(4, 8, 2)).astype(np.float32)
+    store.write_pq(cb)
+    store.close()
+    _stamp_version(path, 2)
+    re = layout.open_store(path)
+    assert re.header.version == 2
+    np.testing.assert_array_equal(re.read_pq(), cb)
+    assert re.read_tombstones() is None
+    assert re.read_label_entries() is None
+    re.close()
+
+
+def test_v2_labeled_fixture_has_labels_semantics_unchanged(tmp_path):
+    """has_labels=1 without a label-entry table (the v2 state) must still
+    read back as labeled — the v3 entry table is additive, not a
+    reinterpretation of the old flag."""
+    rng = np.random.default_rng(1)
+    path = str(tmp_path / "v2lab.ctpl")
+    vecs = rng.normal(size=(10, 8)).astype(np.float32)
+    adj = rng.integers(-1, 10, size=(10, 4)).astype(np.int32)
+    labels = rng.integers(0, 3, 10).astype(np.int32)
+    layout.write_store(path, vecs, adj, medoid=0, labels=labels).close()
+    _stamp_version(path, 2)
+    re = layout.open_store(path)
+    assert re.header.version == 2 and re.header.has_labels
+    np.testing.assert_array_equal(np.asarray(re.labels[:10]), labels)
+    assert re.read_label_entries() is None
+    re.close()
+
+
+def test_engine_load_derives_tombstones_on_pre_v3_file(tmp_path):
+    """A pre-v3 unlabeled store loads with the legacy derivation: rows
+    ≥ n_active dead, everything else live."""
+    from tests.conftest import VPARAMS, make_clustered
+    from repro.store.io_engine import DiskVectorSearchEngine
+    data, _, _ = make_clustered(n=300, d=16, n_clusters=4, seed=9)
+    path = str(tmp_path / "legacy.ctpl")
+    eng = DiskVectorSearchEngine(mode="diskann", vamana=VPARAMS,
+                                 capacity=350, cache_frames=64,
+                                 store_path=path).build(data)
+    eng.close()
+    # strip the v3 fields the way a v2 writer would have left them
+    bs = layout.open_store(path)
+    pq, _, _ = bs._read_tail_raw()
+    bs.header.has_tombs = False
+    bs.header.n_label_entries = 0
+    bs._write_tail(pq, b"", b"")
+    bs.close()
+    _stamp_version(path, 2)
+
+    re = DiskVectorSearchEngine.load(path, mode="diskann", vamana=VPARAMS,
+                                     cache_frames=64)
+    assert re.n_active == 300
+    assert not re._tomb_np[:300].any() and re._tomb_np[300:].all()
+    re.close()
