@@ -1,0 +1,312 @@
+"""fig7_adapt/* — the workload-adaptation claim (paper §1, Fig. 7), measured.
+
+Replays shifted query streams (``data.workloads.make_shifted_zipf``:
+sudden swap, gradual drift, periodic flip-flop) through four systems on
+one shared Vamana graph:
+
+* ``adaptive``  — catapult engine + ``repro.adapt.CatapultMaintainer``
+                  (drift flush, TTL, utility gate, the tentpole),
+* ``catapult``  — plain catapult, LRU publishes only (the paper's
+                  passive adaptation),
+* ``frozen``    — catapult warmed on the pre-shift stream, then bucket
+                  state pinned (publishes discarded): the "cache-based
+                  alternative" failure mode, adaptation removed,
+* ``proximity`` — the Proximity front-cache baseline (Bergman et al.):
+                  its "win" is a cache hit, which collapses at the
+                  shift and only refills at cache-miss rate.
+
+Per row: pre/post-shift win-rate, **post_shift_recovery_queries** (how
+many post-shift queries until the 2-window smoothed win-rate regains
+``RECOVERY_FRAC`` of its pre-shift level; -1 = never within the
+stream), and post-shift recall/hops.  The acceptance bar: ``adaptive``
+recovers inside the recorded budget, ``frozen`` does not — both
+enforced by check_regression.py.
+
+``fig7_adapt/stationary/uniform`` measures the gate's overhead story:
+a uniform stream through adaptive-vs-plain catapult, interleaved
+repeats, reporting ``stationary_overhead_pct`` (QPS cost of running
+the adapt layer; the CI gate demands < 2%).
+
+CLI: ``--quick`` (CI-sized), ``--json PATH`` (regression-gate artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_disk import rows_to_json
+from benchmarks.common import VP
+from repro.adapt import CatapultMaintainer, PolicyConfig
+from repro.core import (VectorSearchEngine, brute_force_knn,
+                        proximity_cache as pc, recall_at_k)
+from repro.core.vamana import build_vamana
+from repro.data.workloads import make_shifted_zipf, make_uniform
+
+K = 8
+BEAM = 2 * K
+BATCH = 128
+RECOVERY_FRAC = 0.9
+SMOOTH = 2                   # windows in the rolling recovery average
+SCENARIOS = ("sudden", "gradual", "flipflop")
+
+# CI shift streams are ~16 batches: tighter maintenance cadence than
+# the serving defaults (shadow baseline + ticks early enough to act
+# mid-stream).  The stationary-overhead row deliberately runs the
+# PRODUCTION defaults instead — that is the configuration whose cost
+# the <2% gate certifies.
+SHIFT_POLICY = PolicyConfig(observe_every=1, baseline_every=6,
+                            min_batches=4)
+SHIFT_TICK_EVERY = 2
+
+
+def _warm(eng, queries, maintainer=None):
+    """Compile every jit signature the replay will hit — the catapult
+    dispatch exactly as replay calls it (publish_mask=None IS part of
+    the jit cache key), the diskann path shadow/gated batches take, and
+    the telemetry folds — then restore engine/adapt state, so neither
+    compile time nor warm publishes pollute a curve or a QPS number."""
+    q = queries[:BATCH]
+    cat = getattr(eng, "_cat", None)
+    _, _, st = eng.search(q, k=K, beam_width=BEAM)
+    if getattr(eng, "mode", None) == "catapult":
+        eng.catapult_override = False
+        try:
+            eng.search(q, k=K, beam_width=BEAM)
+        finally:
+            eng.catapult_override = None
+    if cat is not None:
+        eng._cat = cat                       # discard the warm publishes
+    if maintainer is not None:
+        from repro.adapt import stats as ts
+        for unit in maintainer._units:
+            scratch = ts.init_telemetry(unit._cat.buckets.ids.shape[0])
+            for baseline in (False, True):   # both observe_update traces
+                ts.observe_update(
+                    scratch, unit._cat.lsh, q,
+                    np.asarray(st.used, bool), np.asarray(st.won, bool),
+                    np.asarray(st.hops, np.float32), np.ones(BATCH, bool),
+                    baseline=baseline,
+                    win_alpha=maintainer.policy.win_alpha,
+                    fast_decay=maintainer.policy.fast_decay,
+                    slow_decay=maintainer.policy.slow_decay)
+
+
+def replay(eng, queries, *, maintainer=None, freeze_at=None):
+    """Stream ``queries`` in order; returns (per-batch win rates,
+    per-batch mean hops, result ids, seconds).
+
+    ``freeze_at``: batch index after which bucket state is pinned —
+    searches still read the table, but every publish is discarded
+    (the frozen-catapult baseline).
+    """
+    n = (queries.shape[0] // BATCH) * BATCH
+    wins, hops, all_ids = [], [], []
+    frozen_cat = None
+    t0 = time.perf_counter()
+    for b, lo in enumerate(range(0, n, BATCH)):
+        q = queries[lo: lo + BATCH]
+        active = getattr(eng, "catapult_active", True)
+        enabled = getattr(eng, "catapult_enabled", True)
+        ids, _, st = eng.search(q, k=K, beam_width=BEAM)
+        if freeze_at is not None and b >= freeze_at:
+            if frozen_cat is None:
+                frozen_cat = eng._cat        # state as of the freeze point
+            eng._cat = frozen_cat            # discard this batch's publishes
+        if maintainer is not None:
+            maintainer.observe(q, st)
+        # Shadow batches (gate ON, one-batch diskann override) report
+        # won=0 by construction — carry the last catapulted value so a
+        # periodic measurement artifact doesn't dent the curve.  A
+        # GATED-OFF batch is the real thing: catapults are not serving,
+        # so it scores 0 — a system that bails out to diskann must not
+        # be credited with its pre-shift win-rate as "recovered".
+        if active:
+            wins.append(float(np.mean(st.won)))
+        elif enabled and wins:
+            wins.append(wins[-1])            # one-off shadow batch
+        else:
+            wins.append(0.0)                 # utility gate has bailed out
+        hops.append(float(np.mean(st.hops)))
+        all_ids.append(ids)
+    dt = time.perf_counter() - t0
+    return np.asarray(wins), np.asarray(hops), np.concatenate(all_ids), dt
+
+
+def replay_proximity(eng, queries, *, capacity=512, tau=2.0):
+    """The Proximity baseline: probe the front cache, serve hits
+    verbatim, send misses to the (diskann) engine and cache them.
+    Its per-batch "win" is the cache hit rate."""
+    n = (queries.shape[0] // BATCH) * BATCH
+    cache = pc.make_cache(capacity=capacity, dim=queries.shape[1], k=K)
+    wins, all_ids = [], []
+    t0 = time.perf_counter()
+    for lo in range(0, n, BATCH):
+        q = jnp.asarray(queries[lo: lo + BATCH])
+        hit = pc.cache_probe(cache, q, jnp.float32(tau))
+        ids_db, _, st = eng.search(queries[lo: lo + BATCH], k=K,
+                                   beam_width=BEAM)
+        served = np.where(np.asarray(hit.hit)[:, None],
+                          np.asarray(hit.ids), ids_db)
+        cache = pc.cache_insert(cache, q, jnp.asarray(ids_db),
+                                ~jnp.asarray(hit.hit))
+        wins.append(float(np.mean(np.asarray(hit.hit))))
+        all_ids.append(served)
+    dt = time.perf_counter() - t0
+    return np.asarray(wins), np.concatenate(all_ids), dt
+
+
+def adaptation_metrics(wins, shift_batch):
+    """(pre-shift win, post-shift win, recovery queries | -1)."""
+    n = wins.size
+    tail = max(2, (shift_batch // 4))
+    pre = float(wins[shift_batch - tail: shift_batch].mean())
+    post_tail = max(2, (n - shift_batch) // 4)
+    post = float(wins[-post_tail:].mean())
+    target = RECOVERY_FRAC * pre
+    recovery = -1
+    for j in range(shift_batch, n):
+        sm = wins[max(shift_batch, j - SMOOTH + 1): j + 1].mean()
+        if sm >= target:
+            recovery = (j - shift_batch + 1) * BATCH
+            break
+    return pre, post, recovery
+
+
+def run_shift(n=4_000, n_queries=2_048) -> list[str]:
+    out = []
+    for kind in SCENARIOS:
+        wl = make_shifted_zipf(n=n, n_queries=n_queries, kind=kind)
+        prebuilt = build_vamana(wl.corpus, VP)
+        nb = (wl.queries.shape[0] // BATCH) * BATCH
+        shift_batch = wl.meta["shift_point"] // BATCH
+        budget = (nb // BATCH - shift_batch) * BATCH
+        truth = brute_force_knn(wl.corpus, wl.queries[:nb], K)
+
+        def engine(mode="catapult"):
+            return VectorSearchEngine(mode=mode, vamana=VP, seed=0).build(
+                wl.corpus, prebuilt=prebuilt)
+
+        systems = {}
+        eng = engine()
+        m = CatapultMaintainer(eng, SHIFT_POLICY,
+                               tick_every=SHIFT_TICK_EVERY)
+        _warm(eng, wl.queries, maintainer=m)
+        w, h, ids, dt = replay(eng, wl.queries, maintainer=m)
+        systems["adaptive"] = (w, h, ids, dt, m)
+
+        eng = engine()
+        _warm(eng, wl.queries)
+        systems["catapult"] = (*replay(eng, wl.queries), None)
+
+        eng = engine()
+        _warm(eng, wl.queries)
+        # warm the table on the first half of phase A, then pin it
+        systems["frozen"] = (*replay(eng, wl.queries,
+                                     freeze_at=shift_batch // 2), None)
+
+        eng = engine(mode="diskann")
+        _warm(eng, wl.queries)
+        w, ids, dt = replay_proximity(eng, wl.queries)
+        systems["proximity"] = (w, np.zeros_like(w), ids, dt, None)
+
+        for name, (wins, hops, ids, dt, m) in systems.items():
+            pre, post, recovery = adaptation_metrics(wins, shift_batch)
+            post_ids = ids[shift_batch * BATCH:]
+            post_truth = truth[shift_batch * BATCH:]
+            derived = (f"pre_shift_win={pre:.3f};"
+                       f"post_shift_win={post:.3f};"
+                       f"post_shift_recovery_queries={recovery};"
+                       f"recovery_budget_queries={budget};"
+                       f"window_queries={BATCH};"
+                       f"post_shift_recall={recall_at_k(post_ids, post_truth):.3f};"
+                       f"post_shift_hops={hops[shift_batch:].mean():.1f}")
+            if m is not None:
+                s = m.snapshot()
+                derived += (f";drift_flushes={s['drift_flushes']};"
+                            f"flushed_entries={s['flushed_entries']};"
+                            f"gate_transitions={s['gate_transitions']}")
+            out.append(f"fig7_adapt/{kind}/{name},{dt / nb * 1e6:.1f},"
+                       f"{derived}")
+    return out
+
+
+def run_stationary(n=4_000, n_queries=2_048, repeats=5) -> list[str]:
+    """The gate's overhead story: adaptive vs plain catapult on a
+    uniform (no-locality) stream.
+
+    Two robustness points: queries never repeat (a replayed stream is
+    temporal locality in disguise — the bucket layer memorizes it and
+    the scenario stops being uniform), and timing interleaves at BATCH
+    granularity — plain and adaptive serve the same fresh batch back to
+    back and the totals compare — so scheduler noise on a shared CI
+    runner hits both systems alike instead of manufacturing a
+    regression."""
+    wl = make_uniform(n=n, n_queries=n_queries)
+    prebuilt = build_vamana(wl.corpus, VP)
+    nb = (wl.queries.shape[0] // BATCH) * BATCH
+    rng = np.random.default_rng(42)
+
+    def fresh_stream():
+        return rng.uniform(-1, 1, size=(nb, wl.queries.shape[1])
+                           ).astype(np.float32) * 4.0
+
+    plain = VectorSearchEngine(mode="catapult", vamana=VP, seed=0).build(
+        wl.corpus, prebuilt=prebuilt)
+    adapt = VectorSearchEngine(mode="catapult", vamana=VP, seed=0).build(
+        wl.corpus, prebuilt=prebuilt)
+    m = CatapultMaintainer(adapt)       # production defaults — see above
+
+    # settle: lets the gate reach its verdict (shadow baselines need
+    # baseline_every batches to arrive) and compiles BOTH dispatch
+    # paths (catapult + gated-off diskann) before any clock starts
+    for _ in range(3):
+        replay(plain, fresh_stream())
+        replay(adapt, fresh_stream(), maintainer=m)
+
+    t_plain = t_adapt = 0.0
+    for _ in range(repeats):
+        stream = fresh_stream()
+        for lo in range(0, nb, BATCH):
+            q = stream[lo: lo + BATCH]
+            t0 = time.perf_counter()
+            plain.search(q, k=K, beam_width=BEAM)
+            t1 = time.perf_counter()
+            _, _, st = adapt.search(q, k=K, beam_width=BEAM)
+            m.observe(q, st)             # the adapt layer's cost, included
+            t2 = time.perf_counter()
+            t_plain += t1 - t0
+            t_adapt += t2 - t1
+    overhead = (t_adapt - t_plain) / t_plain * 100.0
+    total = repeats * nb
+    s = m.snapshot()
+    return [f"fig7_adapt/stationary/uniform,{t_adapt / total * 1e6:.1f},"
+            f"stationary_overhead_pct={overhead:.2f};"
+            f"qps_plain={total / t_plain:.0f};"
+            f"qps_adapt={total / t_adapt:.0f};"
+            f"gate_off={0 if s['enabled'] else 1};"
+            f"hop_saving={s['hop_saving']:.3f}"]
+
+
+def run(n=4_000, n_queries=2_048) -> list[str]:
+    return run_shift(n=n, n_queries=n_queries) + run_stationary(
+        n=n, n_queries=n_queries)
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized corpora (matches benchmarks.run --quick)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write structured results (regression gate)")
+    args = p.parse_args()
+    n, nq = (3_000, 2_048) if args.quick else (10_000, 4_096)
+    rows = run(n=n, n_queries=nq)
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"corpus_n": n, "n_queries": nq,
+                       "results": rows_to_json(rows)}, f, indent=1)

@@ -1,33 +1,48 @@
-"""Benchmark-regression gate — fails CI when the disk-tier perf story slips.
+"""Benchmark-regression gate — fails CI when the perf story slips.
 
-Compares a fresh ``bench_disk --quick --json`` artifact against the
-committed baseline (benchmarks/baselines/disk_quick.json):
+Compares a fresh bench JSON artifact against a committed baseline
+(benchmarks/baselines/*.json).  The baseline file is just a bench
+artifact plus a ``gates`` list naming the rows under guard; WHICH
+checks apply to a gated row follows from the metrics present in its
+baseline entry:
 
-* catapult ``block_reads`` on the biased workload (medrag_zipf) must not
-  regress more than ``max_reads_regression`` (default +10%) on any gated
-  row — the paper's headline I/O claim,
-* ``recall`` must not drop below the committed baseline (minus a 0.005
-  float-noise epsilon) on any gated row,
-* mutable-tier gates (fig2_disk rows): ``post_delete_recall`` must not
-  drop below baseline − epsilon, and ``tombstone_leaks`` must be 0 —
-  a leak means a deleted node surfaced in results,
-* cross-shard parity: the S=4 scatter-gather row must match the S=1
-  single-store row's recall within 1 point (the fig12_sharded
-  acceptance bar), checked on the FRESH run so a sharding regression
-  can't hide behind a stale baseline.
+* ``block_reads`` — must not regress more than ``MAX_READS_REGRESSION``
+  (+10%): the paper's headline I/O claim (fig12 rows),
+* ``recall`` — must not drop below baseline − ``RECALL_EPS``,
+* ``post_delete_recall`` / ``tombstone_leaks`` — mutable-tier gates
+  (fig2_disk rows): deletes must not eat recall, and a tombstoned node
+  in a result set is an outright failure,
+* ``post_shift_recovery_queries`` — adaptation gate (fig7_adapt rows):
+  the fresh run must recover inside its own recorded
+  ``recovery_budget_queries`` AND within ``RECOVERY_SLACK``× the
+  baseline's recovery,
+* ``stationary_overhead_pct`` — the adapt layer's stationary cost must
+  stay under ``STATIONARY_OVERHEAD_MAX`` (absolute, not
+  baseline-relative: the acceptance bar is <2% QPS, full stop).
 
-The baseline file is just a bench_disk JSON artifact plus a ``gates``
-list naming the rows under guard.  To re-baseline after an intentional
-perf change:
+A gated row or gated metric missing from either file is reported as a
+named failure ("metric 'X' missing from baseline row Y"), never a
+KeyError traceback.
+
+Fresh-run structural checks (independent of the baseline, so a
+regression can't hide behind a stale baseline file):
+
+* fig12_sharded: S=4 recall within ``SHARD_PARITY_POINTS`` of S=1,
+* fig7_adapt/sudden: the adaptive system recovers within budget AND
+  the frozen-catapult baseline does NOT — if frozen recovers, the
+  shift scenario lost its teeth and the adaptation claim is vacuous.
+
+To re-baseline after an intentional perf change:
 
     PYTHONPATH=src python -m benchmarks.bench_disk --quick \
         --json benchmarks/baselines/disk_quick.json
+    PYTHONPATH=src python -m benchmarks.bench_adapt --quick \
+        --json benchmarks/baselines/adapt_quick.json
 
-then re-add the ``gates`` key (see the committed file) and commit with
+then re-add the ``gates`` key (see the committed files) and commit with
 the change that moved the numbers.
 
-Usage:  python -m benchmarks.check_regression BENCH_disk.json \
-            benchmarks/baselines/disk_quick.json
+Usage:  python -m benchmarks.check_regression FRESH.json BASELINE.json
 """
 from __future__ import annotations
 
@@ -35,14 +50,100 @@ import argparse
 import json
 import sys
 
-RECALL_EPS = 0.005          # float-noise allowance across platforms
+RECALL_EPS = 0.005           # float-noise allowance across platforms
 MAX_READS_REGRESSION = 0.10  # +10% block reads = regression
 SHARD_PARITY_POINTS = 0.01   # S=4 within 1 recall point of S=1
+STATIONARY_OVERHEAD_MAX = 2.0  # % QPS the adapt layer may cost, absolute
+RECOVERY_SLACK = 1.5         # fresh recovery may take 1.5x the baseline's
+
+# every metric the gate understands; a gated baseline row carrying none
+# of these is a configuration error, not a pass
+GATE_KEYS = ("block_reads", "recall", "post_delete_recall",
+             "tombstone_leaks", "post_shift_recovery_queries",
+             "stationary_overhead_pct")
+
+
+def _metric(name: str, row: dict, key: str, side: str,
+            failures: list[str]):
+    """Named-key row access: a missing gated metric is a reported
+    failure, never a KeyError."""
+    if key not in row:
+        failures.append(f"{name}: gated metric '{key}' missing from "
+                        f"{side} row")
+        return None
+    return row[key]
+
+
+def _check_gated_row(name: str, b: dict, c: dict,
+                     failures: list[str]) -> None:
+    if not any(k in b for k in GATE_KEYS):
+        failures.append(
+            f"{name}: baseline row carries none of the gated metrics "
+            f"{', '.join(GATE_KEYS)}")
+        return
+    if "block_reads" in b:
+        reads = _metric(name, c, "block_reads", "fresh", failures)
+        ceiling = b["block_reads"] * (1.0 + MAX_READS_REGRESSION)
+        if reads is not None and reads > ceiling:
+            failures.append(
+                f"{name}: block_reads {reads:.2f} > {ceiling:.2f} "
+                f"(baseline {b['block_reads']:.2f} "
+                f"+{MAX_READS_REGRESSION:.0%})")
+    if "recall" in b:
+        recall = _metric(name, c, "recall", "fresh", failures)
+        if recall is not None and recall < b["recall"] - RECALL_EPS:
+            failures.append(
+                f"{name}: recall {recall:.3f} < baseline "
+                f"{b['recall']:.3f} - {RECALL_EPS}")
+    # mutable-tier gates: deletes must not eat recall, and a
+    # tombstoned node in a result set is an outright failure
+    if "post_delete_recall" in b:
+        pdr = _metric(name, c, "post_delete_recall", "fresh", failures)
+        if pdr is not None and pdr < b["post_delete_recall"] - RECALL_EPS:
+            failures.append(
+                f"{name}: post_delete_recall {pdr:.3f} < baseline "
+                f"{b['post_delete_recall']:.3f} - {RECALL_EPS}")
+    if "tombstone_leaks" in b:
+        leaks = _metric(name, c, "tombstone_leaks", "fresh", failures)
+    else:
+        leaks = c.get("tombstone_leaks")    # fresh-only rows still checked
+    if leaks is not None and leaks > 0:
+        failures.append(
+            f"{name}: {leaks:.0f} tombstoned node(s) returned in "
+            f"search results")
+    # adaptation gates (fig7_adapt rows)
+    if "post_shift_recovery_queries" in b:
+        rec = _metric(name, c, "post_shift_recovery_queries", "fresh",
+                      failures)
+        budget = _metric(name, c, "recovery_budget_queries", "fresh",
+                         failures)
+        if rec is not None and budget is not None:
+            if rec < 0 or rec > budget:
+                failures.append(
+                    f"{name}: post-shift win-rate never recovered within "
+                    f"the {budget:.0f}-query budget "
+                    f"(post_shift_recovery_queries={rec:.0f})")
+            else:
+                b_rec = b["post_shift_recovery_queries"]
+                window = c.get("window_queries", 0.0)
+                allowed = max(b_rec * RECOVERY_SLACK, b_rec + 2 * window)
+                if b_rec > 0 and rec > allowed:
+                    failures.append(
+                        f"{name}: recovery took {rec:.0f} queries > "
+                        f"{allowed:.0f} (baseline {b_rec:.0f} "
+                        f"x{RECOVERY_SLACK} slack)")
+    if "stationary_overhead_pct" in b:
+        ov = _metric(name, c, "stationary_overhead_pct", "fresh", failures)
+        if ov is not None and ov > STATIONARY_OVERHEAD_MAX:
+            failures.append(
+                f"{name}: adapt layer costs {ov:.2f}% QPS on a "
+                f"stationary uniform stream (max "
+                f"{STATIONARY_OVERHEAD_MAX}%)")
 
 
 def check(current: dict, baseline: dict) -> list[str]:
     """Returns a list of human-readable failures (empty = gate passes)."""
-    failures = []
+    failures: list[str] = []
     cur = current["results"]
     base = baseline["results"]
     for name in baseline.get("gates", []):
@@ -52,30 +153,7 @@ def check(current: dict, baseline: dict) -> list[str]:
         if name not in cur:
             failures.append(f"{name}: gated row missing from fresh run")
             continue
-        b, c = base[name], cur[name]
-        ceiling = b["block_reads"] * (1.0 + MAX_READS_REGRESSION)
-        if c["block_reads"] > ceiling:
-            failures.append(
-                f"{name}: block_reads {c['block_reads']:.2f} > "
-                f"{ceiling:.2f} (baseline {b['block_reads']:.2f} +"
-                f"{MAX_READS_REGRESSION:.0%})")
-        if c["recall"] < b["recall"] - RECALL_EPS:
-            failures.append(
-                f"{name}: recall {c['recall']:.3f} < baseline "
-                f"{b['recall']:.3f} - {RECALL_EPS}")
-        # mutable-tier gates: deletes must not eat recall, and a
-        # tombstoned node in a result set is an outright failure
-        if "post_delete_recall" in b:
-            if c.get("post_delete_recall", 0.0) \
-                    < b["post_delete_recall"] - RECALL_EPS:
-                failures.append(
-                    f"{name}: post_delete_recall "
-                    f"{c.get('post_delete_recall', 0.0):.3f} < baseline "
-                    f"{b['post_delete_recall']:.3f} - {RECALL_EPS}")
-        if c.get("tombstone_leaks", 0.0) > 0:
-            failures.append(
-                f"{name}: {c['tombstone_leaks']:.0f} tombstoned node(s) "
-                f"returned in search results")
+        _check_gated_row(name, base[name], cur[name], failures)
 
     # fig12_sharded acceptance: S=4 recall within 1 point of S=1, fresh run
     s_rows = {name: m for name, m in cur.items()
@@ -89,12 +167,33 @@ def check(current: dict, baseline: dict) -> list[str]:
                 f"S=1 recall {s1[0]['recall']:.3f} - {SHARD_PARITY_POINTS}")
     elif s_rows:
         failures.append("fig12_sharded rows present but S1/S4 pair missing")
+
+    # fig7_adapt acceptance, fresh run: adaptive recovers, frozen does not
+    adaptive = cur.get("fig7_adapt/sudden/adaptive")
+    frozen = cur.get("fig7_adapt/sudden/frozen")
+    if adaptive is not None and frozen is not None:
+        budget = adaptive.get("recovery_budget_queries", float("inf"))
+        a_rec = adaptive.get("post_shift_recovery_queries", -1)
+        f_rec = frozen.get("post_shift_recovery_queries", -1)
+        if not 0 <= a_rec <= budget:
+            failures.append(
+                f"adaptation: adaptive catapult did not recover within "
+                f"the {budget:.0f}-query budget (got {a_rec:.0f})")
+        if 0 <= f_rec <= budget:
+            failures.append(
+                f"adaptation: the FROZEN baseline recovered in "
+                f"{f_rec:.0f} queries — the shift scenario lost its "
+                f"teeth, the adaptation comparison is vacuous")
+    elif (adaptive is None) != (frozen is None):
+        failures.append(
+            "fig7_adapt/sudden rows present but adaptive/frozen pair "
+            "incomplete")
     return failures
 
 
 def main() -> int:
     p = argparse.ArgumentParser()
-    p.add_argument("current", help="fresh bench_disk --json artifact")
+    p.add_argument("current", help="fresh bench --json artifact")
     p.add_argument("baseline", help="committed baseline JSON")
     args = p.parse_args()
     with open(args.current) as f:
@@ -105,9 +204,9 @@ def main() -> int:
     for name in baseline.get("gates", []):
         if name in current["results"] and name in baseline["results"]:
             c, b = current["results"][name], baseline["results"][name]
-            print(f"{name}: block_reads {c['block_reads']:.2f} "
-                  f"(baseline {b['block_reads']:.2f}), recall "
-                  f"{c['recall']:.3f} (baseline {b['recall']:.3f})")
+            shown = [f"{key} {c[key]:.3g} (baseline {b[key]:.3g})"
+                     for key in GATE_KEYS if key in b and key in c]
+            print(f"{name}: " + ", ".join(shown))
     if failures:
         print("\nBENCH REGRESSION GATE FAILED:", file=sys.stderr)
         for msg in failures:

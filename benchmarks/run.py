@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig10_papers/*        — filtered queries
   fig11_heatmap/*       — (b × L) sensitivity
   fig2_*                — Proximity staleness vs CatapultDB under inserts
+  fig7_adapt/*          — workload shifts: adaptive vs frozen catapult,
+                          recovery time + stationary gate overhead
   fig12_disk/*          — disk-resident tier: block reads / cache hit rate
   kernel/*              — Pallas kernel microbenches (interpret mode)
 
@@ -28,9 +30,9 @@ def main() -> None:
                    help="comma-separated section filter")
     args = p.parse_args()
 
-    from benchmarks import (bench_ablations, bench_disk, bench_dynamic,
-                            bench_filtered, bench_hyperparams, bench_kernels,
-                            bench_substrates, bench_workloads)
+    from benchmarks import (bench_ablations, bench_adapt, bench_disk,
+                            bench_dynamic, bench_filtered, bench_hyperparams,
+                            bench_kernels, bench_substrates, bench_workloads)
 
     quick = args.quick
     sections = {
@@ -52,6 +54,9 @@ def main() -> None:
         "ablations": lambda: bench_ablations.run(
             n=3_000 if quick else 8_000,
             n_queries=512 if quick else 2_048),
+        "adapt": lambda: bench_adapt.run(
+            n=3_000 if quick else 10_000,
+            n_queries=2_048 if quick else 4_096),
         "disk": lambda: bench_disk.run(
             n=4_000 if quick else 12_000,
             n_queries=1_024 if quick else 3_072),

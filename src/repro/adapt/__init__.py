@@ -1,0 +1,30 @@
+"""Workload-adaptation subsystem — drift-aware catapult maintenance.
+
+The paper's differentiating claim (§1, Fig. 7) is that CatapultDB
+adapts gracefully to workload shifts, unlike cache-based alternatives.
+The bucket layer's LRU publishes give *passive* adaptation; this
+package adds the *active* maintenance loop that turns the locality
+trick into a serving system:
+
+* :mod:`repro.adapt.stats` — streaming per-bucket telemetry as a
+  jit-friendly functional state (EWMA win-rate, exponential-decay
+  bucket histograms, drift score),
+* :mod:`repro.adapt.policy` — decay/TTL eviction, drift-triggered
+  region flush, and the utility gate that disables catapult lookup
+  when it stops paying off,
+* :mod:`repro.adapt.maintainer` — the host-side maintenance tick
+  driving policy actions against any engine tier (RAM, disk, sharded
+  disk), per frontend flush or on a background thread.
+"""
+from repro.adapt.maintainer import CatapultMaintainer
+from repro.adapt.policy import PolicyConfig
+from repro.adapt.stats import (TelemetryState, drift_score, hop_saving,
+                               init_telemetry, observe_update,
+                               telemetry_from_arrays, telemetry_to_arrays,
+                               update_telemetry)
+
+__all__ = [
+    "CatapultMaintainer", "PolicyConfig", "TelemetryState", "drift_score",
+    "hop_saving", "init_telemetry", "observe_update",
+    "telemetry_from_arrays", "telemetry_to_arrays", "update_telemetry",
+]

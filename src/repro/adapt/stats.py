@@ -1,0 +1,227 @@
+"""Streaming catapult telemetry — the adapt layer's measurement substrate.
+
+One ``TelemetryState`` per catapult engine (per shard on the sharded
+tier, since each shard hashes with its own LSH planes).  The state is a
+registered pytree of scalars and ``(n_buckets,)`` vectors; folding in a
+batch is ONE fused jit dispatch (:func:`observe_update` hashes the
+queries and updates every signal in a single device step), so telemetry
+rides the serving path at dispatch-overhead cost.
+
+Signals:
+
+* **EWMA win/use-rate** — per-batch fraction of real lanes whose bucket
+  supplied a destination (``used``) / whose best start was a shortcut
+  rather than the medoid (``won``), the paper's Fig. 6(d) measures.
+  ``won`` is NOT the utility gate's signal: on a uniform workload a
+  same-orthant neighbor still "beats" the central medoid ~90% of the
+  time while saving almost no work.
+* **EWMA hops, two-sided** — ``hops_ewma`` over catapult-dispatched
+  batches and ``base_hops_ewma`` over shadow batches the maintainer
+  periodically routes through the plain diskann dispatch (still
+  correct answers — only the entry points differ).  Their ratio is the
+  measured hop saving, the utility signal the policy gate thresholds.
+* **Decay histograms** — two exponential-decay histograms over bucket
+  hash ids: ``recent`` (fast decay, the current window) and
+  ``longrun`` (slow decay, the steady state).  2·``n_buckets`` f32 —
+  2 KiB at the paper's L=8, negligible next to the bucket table.
+* **Drift score** — total-variation distance between the two
+  histograms normalized to distributions: 0 on a stationary stream,
+  approaching 1 when recent traffic concentrates where long-run mass
+  never was.  Triggers the policy layer's region flush.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh as lsh_mod
+
+# default EWMA / decay constants; PolicyConfig carries the tunables and
+# passes them through (static jit args — a handful of values at most).
+WIN_ALPHA = 0.1      # win/use/hops EWMA step
+FAST_DECAY = 0.25    # per-batch decay of the recent-window histogram
+SLOW_DECAY = 0.02    # per-batch decay of the long-run histogram
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TelemetryState:
+    win_ewma: jax.Array       # () f32 EWMA of per-batch catapult win-rate
+    use_ewma: jax.Array       # () f32 EWMA of per-batch catapult use-rate
+    hops_ewma: jax.Array      # () f32 EWMA of mean hops, catapult batches
+    base_hops_ewma: jax.Array  # () f32 EWMA of mean hops, shadow batches
+    recent: jax.Array         # (n_buckets,) f32 fast-decay histogram
+    longrun: jax.Array        # (n_buckets,) f32 slow-decay histogram
+    n_batches: jax.Array      # () i32 catapult batches folded in
+    n_base: jax.Array         # () i32 shadow (diskann) batches folded in
+    n_queries: jax.Array      # () i32 real query lanes folded in
+
+    @property
+    def n_buckets(self) -> int:
+        return self.recent.shape[0]
+
+
+def init_telemetry(n_buckets: int) -> TelemetryState:
+    z = jnp.float32(0.0)
+    return TelemetryState(
+        win_ewma=z, use_ewma=z, hops_ewma=z, base_hops_ewma=z,
+        recent=jnp.zeros(n_buckets, jnp.float32),
+        longrun=jnp.zeros(n_buckets, jnp.float32),
+        n_batches=jnp.int32(0), n_base=jnp.int32(0),
+        n_queries=jnp.int32(0))
+
+
+def _ewma(old, new, alpha, first, active):
+    stepped = jnp.where(first, new, (1 - alpha) * old + alpha * new)
+    return jnp.where(active, stepped, old)
+
+
+def _update(state: TelemetryState, hashes, used, won, hops, real,
+            baseline, win_alpha, fast_decay, slow_decay) -> TelemetryState:
+    real = jnp.asarray(real, bool)
+    n_real = jnp.sum(real)
+    active = n_real > 0
+    denom = jnp.maximum(n_real, 1).astype(jnp.float32)
+    win_rate = jnp.sum(won & real).astype(jnp.float32) / denom
+    use_rate = jnp.sum(used & real).astype(jnp.float32) / denom
+    mean_hops = (jnp.sum(jnp.where(real, hops, 0)).astype(jnp.float32)
+                 / denom)
+    a = jnp.float32(win_alpha)
+
+    # traffic histograms update on every observed batch — shadow batches
+    # are real traffic too, and drift detection must not pause for them
+    counts = jnp.zeros_like(state.recent).at[hashes].add(
+        real.astype(jnp.float32))
+    recent = (1 - jnp.float32(fast_decay)) * state.recent + counts
+    longrun = (1 - jnp.float32(slow_decay)) * state.longrun + counts
+
+    if baseline:
+        base = _ewma(state.base_hops_ewma, mean_hops, a,
+                     state.n_base == 0, active)
+        return TelemetryState(
+            win_ewma=state.win_ewma, use_ewma=state.use_ewma,
+            hops_ewma=state.hops_ewma, base_hops_ewma=base,
+            recent=recent, longrun=longrun,
+            n_batches=state.n_batches,
+            n_base=state.n_base + active.astype(jnp.int32),
+            n_queries=state.n_queries + n_real.astype(jnp.int32))
+
+    first = state.n_batches == 0
+    return TelemetryState(
+        win_ewma=_ewma(state.win_ewma, win_rate, a, first, active),
+        use_ewma=_ewma(state.use_ewma, use_rate, a, first, active),
+        hops_ewma=_ewma(state.hops_ewma, mean_hops, a, first, active),
+        base_hops_ewma=state.base_hops_ewma,
+        recent=recent, longrun=longrun,
+        n_batches=state.n_batches + active.astype(jnp.int32),
+        n_base=state.n_base,
+        n_queries=state.n_queries + n_real.astype(jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("baseline", "win_alpha", "fast_decay",
+                                   "slow_decay"))
+def update_telemetry(state: TelemetryState,
+                     hashes: jax.Array,   # (B,) i32 bucket ids
+                     used: jax.Array,     # (B,) bool
+                     won: jax.Array,      # (B,) bool
+                     hops: jax.Array,     # (B,) node expansions
+                     real: jax.Array,     # (B,) bool, False = padding
+                     *,
+                     baseline: bool = False,
+                     win_alpha: float = WIN_ALPHA,
+                     fast_decay: float = FAST_DECAY,
+                     slow_decay: float = SLOW_DECAY) -> TelemetryState:
+    """Fold one observed batch into the telemetry (pre-hashed variant —
+    the offline-replay surface the property tests exercise).
+
+    Only ``real`` lanes count: the frontend's padded lanes repeat a
+    real query, and folding them in would double-count exactly the
+    batch-boundary traffic.  ``baseline=True`` marks a shadow batch the
+    maintainer routed through the diskann dispatch — it feeds
+    ``base_hops_ewma`` and the histograms, never the win/use signals.
+    The first batch on each side seeds its EWMAs directly instead of
+    averaging against the zero init.
+    """
+    return _update(state, hashes, used, won, hops, real, baseline,
+                   win_alpha, fast_decay, slow_decay)
+
+
+@partial(jax.jit, static_argnames=("baseline", "win_alpha", "fast_decay",
+                                   "slow_decay"))
+def observe_update(state: TelemetryState, lsh: lsh_mod.LSHParams,
+                   queries: jax.Array, used: jax.Array, won: jax.Array,
+                   hops: jax.Array, real: jax.Array, *,
+                   baseline: bool = False,
+                   win_alpha: float = WIN_ALPHA,
+                   fast_decay: float = FAST_DECAY,
+                   slow_decay: float = SLOW_DECAY) -> TelemetryState:
+    """The serving path's fused step: hash + full telemetry update in a
+    single jit dispatch per unit per batch."""
+    hashes = lsh_mod.pack_bits(lsh_mod.hash_bits(lsh, queries))
+    return _update(state, hashes, used, won, hops, real, baseline,
+                   win_alpha, fast_decay, slow_decay)
+
+
+@jax.jit
+def drift_score(state: TelemetryState) -> jax.Array:
+    """Total-variation distance between the recent-window and long-run
+    bucket distributions, in [0, 1].
+
+    0 while either histogram is still empty (no evidence is not
+    drift), 0 on a stationary stream once both have mass, and monotone
+    over the onset of a hard shift: each post-shift batch moves the
+    fast histogram toward the new distribution while the slow one
+    lags, so the gap widens until the long-run side catches up.
+    """
+    rm, lm = jnp.sum(state.recent), jnp.sum(state.longrun)
+    p = state.recent / jnp.maximum(rm, 1e-9)
+    q = state.longrun / jnp.maximum(lm, 1e-9)
+    tv = 0.5 * jnp.sum(jnp.abs(p - q))
+    return jnp.where((rm > 0) & (lm > 0), tv, jnp.float32(0.0))
+
+
+def hop_saving(state: TelemetryState) -> float | None:
+    """Measured fractional hop saving of catapult dispatch over the
+    shadow diskann baseline — the utility gate's signal.  None until
+    both sides have evidence."""
+    if int(state.n_batches) == 0 or int(state.n_base) == 0:
+        return None
+    base = float(state.base_hops_ewma)
+    if base <= 0:
+        return None
+    return 1.0 - float(state.hops_ewma) / base
+
+
+def hot_buckets(state: TelemetryState, top: int) -> np.ndarray:
+    """Indices of the ``top`` buckets by recent traffic mass (host-side
+    helper for the maintainer's cache re-pinning)."""
+    recent = np.asarray(state.recent)
+    top = min(int(top), recent.size)
+    idx = np.argpartition(recent, -top)[-top:]
+    return idx[recent[idx] > 0]
+
+
+# ------------------------------------------------------------------ persist
+# The disk tiers snapshot telemetry into their bucket sidecars; a plain
+# field-name -> ndarray dict keeps the npz schema self-describing and
+# round-trips byte-identically (float32 in, float32 out, no recompute).
+
+def telemetry_to_arrays(state: TelemetryState,
+                        prefix: str = "adapt_") -> dict[str, np.ndarray]:
+    return {prefix + f.name: np.asarray(getattr(state, f.name))
+            for f in dataclasses.fields(TelemetryState)}
+
+
+def telemetry_from_arrays(arrays, prefix: str = "adapt_"
+                          ) -> TelemetryState | None:
+    """Rebuild a state from ``telemetry_to_arrays`` output (e.g. an open
+    npz); returns None when the snapshot lacks adapt keys (older file)."""
+    names = [f.name for f in dataclasses.fields(TelemetryState)]
+    if not all(prefix + n in arrays for n in names):
+        return None
+    return TelemetryState(**{n: jnp.asarray(arrays[prefix + n])
+                             for n in names})

@@ -25,6 +25,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 INVALID = jnp.int32(-1)
 
@@ -93,6 +94,21 @@ def publish(state: BucketState, bucket_idx: jax.Array, dest: jax.Array,
     return BucketState(ids=ids, stamp=stamp, tag=tag, step=step)
 
 
+def evict_where(state: BucketState, mask: jax.Array) -> BucketState:
+    """Clear every occupied entry selected by ``mask`` ((n_buckets, b) bool).
+
+    The one invalidation primitive every flush path shares: ids, stamps
+    AND tags all reset to INVALID together — a cleared slot that kept
+    its tag would let a later filtered lookup match a ghost label, and a
+    kept stamp would make the empty slot lose LRU-eviction priority.
+    """
+    bad = mask & (state.ids >= 0)
+    return BucketState(ids=jnp.where(bad, INVALID, state.ids),
+                       stamp=jnp.where(bad, INVALID, state.stamp),
+                       tag=jnp.where(bad, INVALID, state.tag),
+                       step=state.step)
+
+
 def evict_ids(state: BucketState, dead: jax.Array) -> BucketState:
     """Clear every bucket entry whose destination is in ``dead``.
 
@@ -104,8 +120,41 @@ def evict_ids(state: BucketState, dead: jax.Array) -> BucketState:
     story is about insertions; deletions get the active flush).
     """
     dead = jnp.asarray(dead, jnp.int32).ravel()
-    bad = jnp.isin(state.ids, dead) & (state.ids >= 0)
-    return BucketState(ids=jnp.where(bad, INVALID, state.ids),
-                       stamp=jnp.where(bad, INVALID, state.stamp),
-                       tag=jnp.where(bad, INVALID, state.tag),
-                       step=state.step)
+    return evict_where(state, jnp.isin(state.ids, dead))
+
+
+def evict_buckets(state: BucketState, bucket_mask: jax.Array) -> BucketState:
+    """Flush whole bucket rows (``bucket_mask``: (n_buckets,) bool).
+
+    The adapt layer's drift-flush unit: when a query region shifts, the
+    shortcuts published under the old regime steer beams into the stale
+    hot set — clearing the region's rows costs a handful of cold starts
+    and stops the misdirection immediately.
+    """
+    return evict_where(state, jnp.asarray(bucket_mask, bool)[:, None])
+
+
+def to_arrays(state: BucketState) -> dict[str, np.ndarray]:
+    """Field-name -> ndarray snapshot — THE sidecar schema every persist
+    path shares (single-store ``.adapt.npz``, sharded ``.buckets.npz``),
+    so the writers cannot drift apart."""
+    return {f.name: np.asarray(getattr(state, f.name))
+            for f in dataclasses.fields(BucketState)}
+
+
+def from_arrays(arrays) -> BucketState:
+    """Rebuild a state from ``to_arrays`` output (e.g. an open npz)."""
+    return BucketState(**{f.name: jnp.asarray(arrays[f.name])
+                          for f in dataclasses.fields(BucketState)})
+
+
+def evict_stale(state: BucketState, max_age: jax.Array) -> BucketState:
+    """TTL eviction: clear entries whose stamp is older than
+    ``step - max_age`` on the bucket layer's publish clock.
+
+    Ages in publish *events*, not wall time — a bucket that stopped
+    receiving traffic stops refreshing its stamps while the global clock
+    keeps advancing, so its entries expire exactly when the workload
+    moved away."""
+    cutoff = state.step - jnp.asarray(max_age, jnp.int32)
+    return evict_where(state, (state.stamp >= 0) & (state.stamp < cutoff))

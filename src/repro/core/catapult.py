@@ -69,6 +69,7 @@ def catapulted_lookup(
     label_entry: Optional[jax.Array] = None,     # (n_labels,) per-label entry points
     neighbor_mask_fn=None,
     result_mask_fn=None,
+    publish_mask: Optional[jax.Array] = None,    # (B,) bool, False = don't publish
 ) -> tuple[CatapultState, SearchResult, CatapultStats]:
     """One batch of Algorithm 2.  Returns (new state, results, stats)."""
     b = queries.shape[0]
@@ -107,7 +108,17 @@ def catapulted_lookup(
     d_fb = jax.vmap(lambda q, m: dist_fn(q, m[None]))(queries, fallback)[:, 0]
     won = used & (jnp.min(jnp.where(cat_sp >= 0, d_start, jnp.inf), axis=1) < d_fb)
 
+    # Masked lanes (batch padding, frozen replicas) neither publish nor
+    # report usage: a padded lane repeats a real query, so letting it
+    # through would double-publish the destination (skewing the bucket
+    # LRU toward batch-boundary queries) and double-count in any
+    # telemetry derived from used/won.
     best = result.ids[:, 0]
+    if publish_mask is not None:
+        pm = jnp.asarray(publish_mask, bool)
+        best = jnp.where(pm, best, INVALID)
+        used &= pm
+        won &= pm
     new_buckets = bk.publish(state.buckets, hashes, best, flt)
     new_state = CatapultState(lsh=state.lsh, buckets=new_buckets)
     stats = CatapultStats(used=used, won=won, hops=result.hops,

@@ -149,6 +149,27 @@ class VectorSearchEngine:
     seed: int = 0
     capacity: Optional[int] = None  # adjacency row preallocation for inserts
     store: Optional[object] = None  # NodeStore backend; default RamStore
+    # workload-adaptation hooks (repro.adapt): the utility gate routes
+    # catapult-mode dispatch through the plain diskann path when the
+    # maintainer decides shortcuts stopped paying off — a gated-off
+    # engine runs the very same jit'd search a diskann-mode engine does,
+    # so uniform workloads pay ~zero catapult overhead.
+    # ``catapult_enabled`` is the PERSISTENT gate verdict (saved by the
+    # disk tiers); ``catapult_override`` is the maintainer's transient
+    # one-batch dispatch override for shadow-baseline/probe batches and
+    # is never persisted — keeping them separate means a save() landing
+    # mid-shadow cannot permanently gate a reopened engine off.
+    # ``adapt_state`` is the maintainer's per-engine telemetry.
+    catapult_enabled: bool = True
+    catapult_override: Optional[bool] = None
+    adapt_state: Optional[object] = None
+
+    @property
+    def catapult_active(self) -> bool:
+        """Effective dispatch switch: the transient override when one is
+        armed, else the persistent gate."""
+        return (self.catapult_override if self.catapult_override is not None
+                else self.catapult_enabled)
 
     # populated by build()
     n_active: int = 0
@@ -269,9 +290,15 @@ class VectorSearchEngine:
     def search(self, queries: np.ndarray, k: int,
                beam_width: int | None = None,
                filter_labels: np.ndarray | None = None,
-               max_iters: int | None = None
+               max_iters: int | None = None,
+               publish_mask: np.ndarray | None = None
                ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
-        """Batched k-NN search.  Returns (ids (B,k), dists (B,k), stats)."""
+        """Batched k-NN search.  Returns (ids (B,k), dists (B,k), stats).
+
+        ``publish_mask`` ((B,) bool) opts lanes out of the catapult
+        bucket publish and usage stats — the serving frontend masks its
+        padded lanes, and a frozen-catapult baseline passes all-False.
+        """
         queries = jnp.asarray(queries, jnp.float32)
         b = queries.shape[0]
         l = beam_width or max(2 * k, 16)
@@ -288,7 +315,8 @@ class VectorSearchEngine:
                    if filter_labels is not None
                    else jnp.full((b,), -1, jnp.int32))
 
-        res, used, won = self._dispatch(queries, flabels, spec)
+        res, used, won = self._dispatch(queries, flabels, spec,
+                                        publish_mask=publish_mask)
 
         ids, dists = np.asarray(res.ids), np.asarray(res.dists)
         if self.pq_subspaces:   # full-precision rerank (DiskANN final fetch)
@@ -300,21 +328,26 @@ class VectorSearchEngine:
         return ids, dists, stats
 
     def _dispatch(self, queries: jax.Array, flabels: jax.Array,
-                  spec: 'SearchSpec'):
+                  spec: 'SearchSpec', publish_mask=None):
         """Run the mode's jit'd traversal; returns (raw result, used, won).
 
         Shared by the RAM search above and the disk engine's I/O-counted
         rerank path (repro.store.io_engine), which consumes the raw
-        expansion trace instead of the device-side rerank.
+        expansion trace instead of the device-side rerank.  A gated-off
+        catapult engine (``catapult_enabled=False``) falls through to
+        the diskann dispatch — identical jit cache entry, zero shortcut
+        overhead.
         """
         b = queries.shape[0]
-        if self.mode == 'catapult':
+        if self.mode == 'catapult' and self.catapult_active:
+            pm = (None if publish_mask is None
+                  else jnp.asarray(publish_mask, bool))
             new_cat, res, st = _search_catapult(
                 self._cat, self._adj, self._vec, self._tomb, self._labels,
                 self._label_entry, queries, flabels, jnp.int32(self.medoid),
                 spec, self.pq_subspaces or 0,
                 self._pq if self.pq_subspaces else None,
-                self._codes if self.pq_subspaces else None)
+                self._codes if self.pq_subspaces else None, pm)
             self._cat = new_cat
             return res, np.asarray(st.used), np.asarray(st.won)
         if self.mode == 'lsh_apg':
@@ -348,7 +381,7 @@ class VectorSearchEngine:
         b = queries.shape[0]
         l = beam_width or max(2 * k, 16)
         spec1 = SearchSpec(beam_width=l, k=l, max_iters=phase1_iters)
-        if self.mode == 'catapult':
+        if self.mode == 'catapult' and self.catapult_active:
             new_cat, res, st = _search_catapult(
                 self._cat, self._adj, self._vec, self._tomb, None, None,
                 jnp.asarray(queries), jnp.full((b,), -1, jnp.int32),
@@ -510,10 +543,11 @@ def _search_apg(apg_index, adj, vec, tomb, labels, queries, flabels, medoid,
 
 @partial(jax.jit, static_argnames=('spec', 'pq_sub'))
 def _search_catapult(cat_state, adj, vec, tomb, labels, label_entry, queries,
-                     flabels, medoid, spec, pq_sub, pqcb, codes):
+                     flabels, medoid, spec, pq_sub, pqcb, codes,
+                     publish_mask=None):
     nmask, rmask = _masks(tomb, labels, flabels)
     return cat.catapulted_lookup(
         cat_state, adj, queries, spec, _mk_dist(vec, pq_sub, pqcb, codes),
         medoid, filter_labels=flabels, node_labels=labels,
         label_entry=label_entry, neighbor_mask_fn=nmask,
-        result_mask_fn=rmask)
+        result_mask_fn=rmask, publish_mask=publish_mask)

@@ -38,6 +38,8 @@ class Workload:
     queries: np.ndarray                # (Q, d), replayed in order
     labels: np.ndarray | None = None   # (N,) corpus labels (papers)
     filter_labels: np.ndarray | None = None  # (Q,) query predicates
+    meta: dict | None = None           # generator annotations (shift points
+                                       # etc.) consumed by the adapt benches
 
 
 def _clustered_corpus(n, d, n_clusters, rng, spread=1.0, sep=1.5,
@@ -103,6 +105,53 @@ def make_medrag_zipf(n=20_000, d=24, n_clusters=256, n_queries=4_096,
     return Workload("medrag_zipf", corpus, qs.astype(np.float32))
 
 
+def make_shifted_zipf(n=20_000, d=24, n_clusters=256, n_queries=4_096,
+                      seed=1, zipf_a=1.8, paraphrase=0.15, kind="sudden",
+                      period=None):
+    """medrag_zipf with a mid-stream workload shift (the paper's Fig. 7
+    adaptation scenarios).
+
+    Two independent rank→cluster popularity maps A and B over the SAME
+    corpus; each query draws its Zipf rank as usual, then resolves it
+    through A or B depending on stream position:
+
+      sudden    — A for the first half, B for the second: the hot set
+                  swaps instantly (a trending-topic event),
+      gradual   — P(B) ramps linearly from 0 to 1 over the middle half
+                  of the stream: slow audience migration,
+      flipflop  — A/B alternate every ``period`` queries (default Q/8):
+                  periodic traffic (time zones, weekday/weekend).
+
+    ``meta['shift_point']`` marks where post-shift measurement starts:
+    the swap for sudden, the end of the ramp for gradual, the last flip
+    for flipflop.
+    """
+    rng = np.random.default_rng(seed)
+    corpus, centers, _ = _clustered_corpus(n, d, n_clusters, rng)
+    ranks = rng.zipf(zipf_a, size=n_queries) % n_clusters
+    perm_a = rng.permutation(n_clusters)
+    perm_b = rng.permutation(n_clusters)
+    i = np.arange(n_queries)
+    if kind == "sudden":
+        shift = n_queries // 2
+        use_b = i >= shift
+    elif kind == "gradual":
+        ramp = np.clip((i - n_queries // 4) / max(n_queries // 2, 1), 0., 1.)
+        use_b = rng.random(n_queries) < ramp
+        shift = 3 * n_queries // 4
+    elif kind == "flipflop":
+        period = period or max(n_queries // 8, 1)
+        use_b = (i // period) % 2 == 1
+        shift = (n_queries // period) * period - period
+    else:
+        raise ValueError(f"unknown shift kind {kind!r}")
+    cluster = np.where(use_b, perm_b[ranks], perm_a[ranks])
+    qs = centers[cluster] + paraphrase * rng.normal(size=(n_queries, d))
+    return Workload(f"shifted_zipf_{kind}", corpus, qs.astype(np.float32),
+                    meta={"kind": kind, "shift_point": int(shift),
+                          "period": int(period or 0)})
+
+
 def make_uniform(n=20_000, d=24, n_queries=4_096, seed=2):
     rng = np.random.default_rng(seed)
     corpus, _, _ = _clustered_corpus(n, d, 64, rng)
@@ -126,6 +175,7 @@ def make_papers(n=20_000, d=24, n_labels=16, n_queries=2_048, seed=3):
 WORKLOADS = {
     "tripclick": make_tripclick,
     "medrag_zipf": make_medrag_zipf,
+    "shifted_zipf": make_shifted_zipf,
     "uniform": make_uniform,
     "papers": make_papers,
 }

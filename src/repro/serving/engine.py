@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core.engine import SearchStats
 from repro.models import model as M
 
 
@@ -32,22 +33,32 @@ class VectorSearchFrontend:
     """Coalesce single search requests into fixed-shape backend batches.
 
     The backend's jit cache is keyed on batch shape, so the frontend
-    always dispatches full ``max_batch``-row batches (padding by
-    repeating the last real query; padded lanes are dropped on return —
-    their bucket publishes are harmless duplicates of real traffic).
-    ``submit`` returns a ticket; ``flush`` services every pending ticket
-    in ONE backend search per chunk and returns ``{ticket: (ids,
-    dists)}``.  ``search`` is the batch-in/batch-out convenience used by
-    bulk callers (it also returns the per-chunk SearchStats for I/O
-    attribution).
+    always dispatches full ``max_batch``-row batches, padding by
+    repeating the last real query.  Padded lanes are masked out of the
+    catapult bucket publish and out of the returned stats
+    (``publish_mask``): an unmasked pad would double-publish the last
+    real query's destination — skewing the bucket LRU toward
+    batch-boundary traffic — and double-count it in the adapt layer's
+    win-rate/drift telemetry.  ``submit`` returns a ticket; ``flush``
+    services every pending ticket in ONE backend search per chunk and
+    returns ``{ticket: (ids, dists)}``.  ``search`` is the
+    batch-in/batch-out convenience used by bulk callers (it also
+    returns the per-chunk SearchStats for I/O attribution, real lanes
+    only).
+
+    ``maintainer`` (a ``repro.adapt.CatapultMaintainer``) hooks the
+    workload-adaptation loop into the serving path: every dispatched
+    chunk is observed (real lanes only), and maintenance ticks ride
+    the flush cadence.
     """
 
     def __init__(self, backend, *, k: int = 10, max_batch: int = 64,
-                 beam_width: Optional[int] = None):
+                 beam_width: Optional[int] = None, maintainer=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.backend = backend
         self.k, self.max_batch, self.beam_width = k, max_batch, beam_width
+        self.maintainer = maintainer
         self._queue: list[tuple[int, np.ndarray]] = []
         self._next_ticket = 0
         self.batches_dispatched = 0
@@ -63,6 +74,35 @@ class VectorSearchFrontend:
     def pending(self) -> int:
         return len(self._queue)
 
+    def _dispatch_chunk(self, qs: np.ndarray, k: int):
+        """Pad to the fixed batch shape, search with padded lanes masked
+        out of publishes, and return (ids, dists, stats) trimmed to the
+        real lanes; feeds the maintainer when one is attached."""
+        real = qs.shape[0]
+        pad = self.max_batch - real
+        if pad:
+            qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
+        mask = np.zeros(self.max_batch, bool)
+        mask[:real] = True
+        ids, dists, stats = self.backend.search(
+            qs, k=k, beam_width=self.beam_width, publish_mask=mask)
+        self.batches_dispatched += 1
+        if self.maintainer is not None:
+            # full padded shape + real_mask, NOT the trimmed views: the
+            # telemetry fold is jit'd on array shape, and one fixed
+            # (max_batch,) signature is the whole point of the padding
+            self.maintainer.observe(qs, stats, real_mask=mask)
+        stats = SearchStats(
+            hops=np.asarray(stats.hops)[:real],
+            ndists=np.asarray(stats.ndists)[:real],
+            used=np.asarray(stats.used)[:real],
+            won=np.asarray(stats.won)[:real],
+            block_reads=(None if stats.block_reads is None
+                         else np.asarray(stats.block_reads)[:real]),
+            cache_hits=(None if stats.cache_hits is None
+                        else np.asarray(stats.cache_hits)[:real]))
+        return np.asarray(ids[:real]), np.asarray(dists[:real]), stats
+
     def flush(self) -> dict[int, tuple[np.ndarray, np.ndarray]]:
         """Serve every queued request; returns {ticket: (ids, dists)}."""
         out: dict[int, tuple[np.ndarray, np.ndarray]] = {}
@@ -70,14 +110,9 @@ class VectorSearchFrontend:
             chunk = self._queue[: self.max_batch]
             self._queue = self._queue[self.max_batch:]
             qs = np.stack([q for _, q in chunk])
-            pad = self.max_batch - qs.shape[0]
-            if pad:
-                qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
-            ids, dists, _ = self.backend.search(
-                qs, k=self.k, beam_width=self.beam_width)
-            self.batches_dispatched += 1
+            ids, dists, _ = self._dispatch_chunk(qs, self.k)
             for row, (ticket, _) in enumerate(chunk):
-                out[ticket] = (np.asarray(ids[row]), np.asarray(dists[row]))
+                out[ticket] = (ids[row], dists[row])
         return out
 
     def search(self, queries: np.ndarray, k: Optional[int] = None):
@@ -90,16 +125,10 @@ class VectorSearchFrontend:
                     np.empty((0, k), np.float32), [])
         all_ids, all_d, all_stats = [], [], []
         for lo in range(0, queries.shape[0], self.max_batch):
-            qs = queries[lo: lo + self.max_batch]
-            real = qs.shape[0]
-            pad = self.max_batch - real
-            if pad:
-                qs = np.concatenate([qs, np.repeat(qs[-1:], pad, axis=0)])
-            ids, dists, stats = self.backend.search(
-                qs, k=k, beam_width=self.beam_width)
-            self.batches_dispatched += 1
-            all_ids.append(np.asarray(ids[:real]))
-            all_d.append(np.asarray(dists[:real]))
+            ids, dists, stats = self._dispatch_chunk(
+                queries[lo: lo + self.max_batch], k)
+            all_ids.append(ids)
+            all_d.append(dists)
             all_stats.append(stats)
         return (np.concatenate(all_ids), np.concatenate(all_d), all_stats)
 

@@ -34,14 +34,22 @@ global counters for the fig12_disk benchmark.
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adapt import stats as adapt_stats
+from repro.core import buckets as bk
+from repro.core import catapult as cat
 from repro.core.beam_search import SearchSpec
 from repro.core.engine import DiskStore, SearchStats, VectorSearchEngine
 from repro.store.cache import NodeCache
 from repro.store.layout import open_store
+
+
+def _adapt_sidecar(store_path: str) -> str:
+    return store_path + ".adapt.npz"
 
 
 def default_pq_subspaces(dim: int) -> int:
@@ -90,6 +98,10 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         bs.write_tombstones(self._tomb_np)
         if self.filtered:
             bs.write_label_entries(np.asarray(self._label_entry))
+        # a fresh build owns the path outright — drop any adapt sidecar
+        # a previous index at this location left behind
+        if os.path.exists(_adapt_sidecar(self.store_path)):
+            os.remove(_adapt_sidecar(self.store_path))
         self._open_cache()
         return self
 
@@ -107,10 +119,13 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         behaviour, masked by the full-precision rerank).  CTPL v3
         mutation state round-trips too: the tombstone bitmap (older
         files derive "rows ≥ n_active are dead") and, for filtered
-        stores, the per-label entry-point table.  Remaining runtime
+        stores, the per-label entry-point table.  Runtime workload
         state: LSH planes rederive from seed; catapult buckets start
-        empty, exactly like a fresh process (workload state, not index
-        state).
+        empty UNLESS a ``<store>.adapt.npz`` sidecar exists (written by
+        ``save()`` when the adapt layer is live), in which case the
+        bucket table, adapt telemetry and utility-gate flag all resume
+        where the saving process left them — mid-drift if that is
+        where it was.
         """
         bs = open_store(store_path)
         entries = bs.read_label_entries()
@@ -147,6 +162,14 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         eng._init_aux(np.ascontiguousarray(bs.vectors[: bs.n_active],
                                            np.float32),
                       pq_codebook=codebook)
+        sidecar = _adapt_sidecar(store_path)
+        if mode == 'catapult' and os.path.exists(sidecar):
+            with np.load(sidecar) as z:
+                eng._cat = cat.CatapultState(lsh=eng._cat.lsh,
+                                             buckets=bk.from_arrays(z))
+                eng.adapt_state = adapt_stats.telemetry_from_arrays(z)
+                if "catapult_enabled" in z:
+                    eng.catapult_enabled = bool(z["catapult_enabled"])
         eng._sync_device()
         eng._open_cache()
         return eng
@@ -190,7 +213,8 @@ class DiskVectorSearchEngine(VectorSearchEngine):
     def search(self, queries: np.ndarray, k: int,
                beam_width: int | None = None,
                filter_labels: np.ndarray | None = None,
-               max_iters: int | None = None
+               max_iters: int | None = None,
+               publish_mask: np.ndarray | None = None
                ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
         """Beam search on device, block fetch + rerank through the cache."""
         q_np = np.ascontiguousarray(queries, np.float32)
@@ -207,7 +231,8 @@ class DiskVectorSearchEngine(VectorSearchEngine):
                    if filter_labels is not None
                    else jnp.full((b,), -1, jnp.int32))
 
-        res, used, won = self._dispatch(queries_j, flabels, spec)
+        res, used, won = self._dispatch(queries_j, flabels, spec,
+                                        publish_mask=publish_mask)
         beam_ids = np.asarray(res.ids)          # (B, l), tombstones masked
         trace = np.asarray(res.trace)           # (B, max_iters), -1 padded
         fl_np = (np.asarray(filter_labels, np.int32)
@@ -254,7 +279,8 @@ class DiskVectorSearchEngine(VectorSearchEngine):
             out_ids[lane, : order.size] = cand[order]
             out_d[lane, : order.size] = d[order]
 
-        if self.mode == 'catapult' and self.pin_catapult_destinations:
+        if self.mode == 'catapult' and self.catapult_active \
+                and self.pin_catapult_destinations:
             # the freshly published destinations (best neighbor per query)
             # are the likeliest next landing blocks — soft-pin them
             dests = out_ids[:, 0]
@@ -330,15 +356,33 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         self._repin()
         return repaired
 
-    def save(self) -> None:
+    def save(self, include_adapt: bool = True) -> None:
         """Flush every persisted structure: blocks, header, tombstone
-        bitmap, and (filtered stores) the label entry table."""
+        bitmap, (filtered stores) the label entry table, and — when the
+        adapt layer is live — the ``<store>.adapt.npz`` sidecar
+        (catapult buckets + telemetry + utility-gate flag), so a
+        reopened single-store index resumes mid-drift exactly like the
+        sharded tier does.  ``include_adapt=False`` is the sharded
+        facade's spelling: its ``.buckets.npz`` sidecars + manifest own
+        the adapt state there, and a second copy per shard could
+        silently diverge."""
         bs = self.store.block_store
         bs.flush(n_active=self.n_active, medoid=self.medoid,
                  has_labels=self.filtered)
         bs.write_tombstones(self._tomb_np)
         if self.filtered:
             bs.write_label_entries(np.asarray(self._label_entry))
+        if self.mode == 'catapult' and self.adapt_state is not None \
+                and include_adapt:
+            np.savez(_adapt_sidecar(self.store_path),
+                     catapult_enabled=np.bool_(self.catapult_enabled),
+                     **bk.to_arrays(self._cat.buckets),
+                     **adapt_stats.telemetry_to_arrays(self.adapt_state))
+        elif os.path.exists(_adapt_sidecar(self.store_path)):
+            # no adapt layer on THIS engine: a leftover sidecar from an
+            # earlier life of the path would resurrect a bucket table
+            # pointing at since-deleted nodes on the next catapult load
+            os.remove(_adapt_sidecar(self.store_path))
 
     def close(self) -> None:
         self.store.close()

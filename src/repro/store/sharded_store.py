@@ -51,6 +51,7 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adapt import stats as adapt_stats
 from repro.core import buckets as bk
 from repro.core import catapult as cat
 from repro.core.engine import SearchStats
@@ -175,12 +176,33 @@ class ShardedDiskVectorSearchEngine:
                 "file": _shard_file(s),
                 "n_active": int(eng.n_active),
                 "capacity": int(eng.capacity or eng.n_active),
+                # the adapt layer's utility gate survives a reopen: a
+                # gated-off replica must not pay catapult overhead on
+                # its first post-restart batches either
+                "catapult_enabled": bool(eng.catapult_enabled),
             } for s, eng in enumerate(self.shards)],
         }
         tmp = os.path.join(self.store_dir, MANIFEST_NAME + ".tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
         os.replace(tmp, os.path.join(self.store_dir, MANIFEST_NAME))
+
+    # ------------------------------------------------------------ adaptation
+    @property
+    def catapult_enabled(self) -> bool:
+        """The adapt layer's utility gate, fanned out over the shards."""
+        return all(eng.catapult_enabled for eng in self.shards)
+
+    @catapult_enabled.setter
+    def catapult_enabled(self, flag: bool) -> None:
+        for eng in self.shards:
+            eng.catapult_enabled = bool(flag)
+
+    @property
+    def catapult_active(self) -> bool:
+        """Effective dispatch switch (gate + any transient shadow/probe
+        override), true only when every shard would catapult."""
+        return all(eng.catapult_active for eng in self.shards)
 
     # ---------------------------------------------------------------- search
     def _executor(self) -> ThreadPoolExecutor:
@@ -192,7 +214,8 @@ class ShardedDiskVectorSearchEngine:
     def search(self, queries: np.ndarray, k: int,
                beam_width: int | None = None,
                filter_labels: np.ndarray | None = None,
-               max_iters: int | None = None
+               max_iters: int | None = None,
+               publish_mask: np.ndarray | None = None
                ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
         """Scatter the batch to every shard, gather + merge global top-k.
 
@@ -221,7 +244,8 @@ class ShardedDiskVectorSearchEngine:
         def one(eng: DiskVectorSearchEngine):
             return eng.search(queries, k, beam_width=per_shard_beam,
                               filter_labels=filter_labels,
-                              max_iters=max_iters)
+                              max_iters=max_iters,
+                              publish_mask=publish_mask)
 
         results = list(self._executor().map(one, self.shards))
         all_ids = np.stack([
@@ -312,12 +336,18 @@ class ShardedDiskVectorSearchEngine:
         batch before ``save()``.
         """
         for s, eng in enumerate(self.shards):
-            eng.save()      # header + tombstone bitmap + label entries
+            # header + tombstone bitmap + label entries; adapt state is
+            # the SHARDED layer's to persist (below + manifest), not the
+            # per-shard engine sidecar's
+            eng.save(include_adapt=False)
             if self.mode == "catapult":
-                b = eng._cat.buckets
+                # adapt telemetry rides in the same sidecar: a reopened
+                # index resumes mid-drift (histograms, win EWMA and all)
+                # instead of relearning the workload from zero
+                extra = (adapt_stats.telemetry_to_arrays(eng.adapt_state)
+                         if eng.adapt_state is not None else {})
                 np.savez(os.path.join(self.store_dir, _bucket_file(s)),
-                         ids=np.asarray(b.ids), stamp=np.asarray(b.stamp),
-                         tag=np.asarray(b.tag), step=np.asarray(b.step))
+                         **bk.to_arrays(eng._cat.buckets), **extra)
         self._write_manifest()
 
     @classmethod
@@ -359,13 +389,11 @@ class ShardedDiskVectorSearchEngine:
             bpath = os.path.join(store_dir, _bucket_file(s))
             if mode == "catapult" and os.path.exists(bpath):
                 with np.load(bpath) as z:
-                    buckets = bk.BucketState(
-                        ids=jnp.asarray(z["ids"]),
-                        stamp=jnp.asarray(z["stamp"]),
-                        tag=jnp.asarray(z["tag"]),
-                        step=jnp.asarray(z["step"]))
+                    buckets = bk.from_arrays(z)
+                    eng.adapt_state = adapt_stats.telemetry_from_arrays(z)
                 eng._cat = cat.CatapultState(lsh=eng._cat.lsh,
                                              buckets=buckets)
+            eng.catapult_enabled = bool(meta.get("catapult_enabled", True))
             self.shards.append(eng)
         self.n_active = sum(eng.n_active for eng in self.shards)
         return self

@@ -1,0 +1,508 @@
+"""Workload-adaptation subsystem (repro.adapt): telemetry properties,
+policy actions, maintainer gate machinery, frontend masking, and the
+adapt-state persistence round-trip."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:             # optional dep — fall back to the local shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.adapt import policy as pol
+from repro.adapt import stats as ts
+from repro.adapt import CatapultMaintainer, PolicyConfig
+from repro.core import buckets as bk
+from repro.core import VamanaParams, VectorSearchEngine
+from repro.core.engine import SearchStats
+from repro.serving.engine import VectorSearchFrontend
+
+NB = 64          # buckets in the unit-test telemetry
+VP_TINY = VamanaParams(max_degree=8, build_beam=16, batch=256, seed=0)
+
+
+def _rand_batches(seed: int, n_batches: int, b: int = 32):
+    """Synthetic observation stream: (hashes, used, won, hops, real)."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_batches):
+        yield (rng.integers(0, NB, b).astype(np.int32),
+               rng.random(b) < 0.7,
+               rng.random(b) < 0.4,
+               rng.integers(5, 30, b).astype(np.float32),
+               rng.random(b) < 0.9)
+
+
+# --------------------------------------------------------------- telemetry
+@given(st.integers(0, 10**6), st.integers(1, 24))
+@settings(max_examples=20, deadline=None)
+def test_ewma_win_rate_matches_offline_replay(seed, n_batches):
+    """Property: the jit'd telemetry equals a numpy replay of the same
+    stream — EWMA win-rate from SearchStats.won, hops likewise."""
+    alpha = 0.125
+    state = ts.init_telemetry(NB)
+    ref_win = ref_hops = None
+    for hashes, used, won, hops, real in _rand_batches(seed, n_batches):
+        state = ts.update_telemetry(state, jnp.asarray(hashes),
+                                    jnp.asarray(used), jnp.asarray(won),
+                                    jnp.asarray(hops), jnp.asarray(real),
+                                    win_alpha=alpha)
+        n_real = int(real.sum())
+        if n_real == 0:
+            continue
+        wr = float((won & real).sum()) / n_real
+        hr = float(hops[real].sum()) / n_real
+        ref_win = wr if ref_win is None else (1 - alpha) * ref_win + alpha * wr
+        ref_hops = hr if ref_hops is None \
+            else (1 - alpha) * ref_hops + alpha * hr
+    if ref_win is not None:
+        assert abs(float(state.win_ewma) - ref_win) < 1e-4
+        assert abs(float(state.hops_ewma) - ref_hops) < 1e-3
+
+
+def test_maintainer_ewma_matches_search_stats_replayed_offline(corpus):
+    """End-to-end property: the win-rate EWMA the maintainer accumulates
+    on the serving path equals an offline replay of the SearchStats.won
+    stream the engine actually returned."""
+    data, centers, _ = corpus
+    eng = VectorSearchEngine(mode="catapult", vamana=VP_TINY,
+                             seed=0).build(data[:512])
+    cfg = PolicyConfig(observe_every=1, baseline_every=10**6)
+    m = CatapultMaintainer(eng, cfg, tick_every=10**6)
+    rng = np.random.default_rng(4)
+    won_stream = []
+    for _ in range(6):
+        q = (centers[rng.integers(0, centers.shape[0], 32)]
+             + 0.3 * rng.normal(size=(32, data.shape[1]))
+             ).astype(np.float32)
+        _, _, st = eng.search(q, k=4)
+        m.observe(q, st)
+        won_stream.append(np.asarray(st.won))
+    ref = None
+    a = cfg.win_alpha
+    for won in won_stream:
+        wr = float(won.mean())
+        ref = wr if ref is None else (1 - a) * ref + a * wr
+    assert abs(m.win_rate - ref) < 1e-5
+
+
+def test_padded_lanes_do_not_bias_telemetry():
+    """A padded (real=False) lane must not move any signal."""
+    base = ts.init_telemetry(NB)
+    h = jnp.asarray([3, 3], jnp.int32)
+    on = jnp.asarray([True, True])
+    hops = jnp.asarray([10., 10.])
+    with_pad = ts.update_telemetry(base, h, on, on, hops,
+                                   jnp.asarray([True, False]))
+    no_pad = ts.update_telemetry(base, h[:1], on[:1], on[:1], hops[:1],
+                                 jnp.asarray([True]))
+    assert float(with_pad.win_ewma) == float(no_pad.win_ewma)
+    assert int(with_pad.n_queries) == int(no_pad.n_queries) == 1
+    assert np.array_equal(np.asarray(with_pad.recent),
+                          np.asarray(no_pad.recent))
+
+
+def test_drift_zero_without_evidence_and_on_stationary_stream():
+    state = ts.init_telemetry(NB)
+    assert float(ts.drift_score(state)) == 0.0
+    # identical traffic shape every batch -> both histograms converge to
+    # the same distribution; TV distance must vanish
+    hashes = jnp.asarray(np.arange(32) % 8, jnp.int32)
+    on = jnp.ones(32, bool)
+    hops = jnp.full(32, 10.0)
+    for _ in range(60):
+        state = ts.update_telemetry(state, hashes, on, on, hops, on)
+    assert float(ts.drift_score(state)) < 1e-3
+
+
+def test_drift_monotone_under_hard_shift():
+    state = ts.init_telemetry(NB)
+    on = jnp.ones(32, bool)
+    hops = jnp.full(32, 10.0)
+    warm = jnp.asarray(np.arange(32) % 8, jnp.int32)           # region A
+    for _ in range(40):
+        state = ts.update_telemetry(state, warm, on, on, hops, on)
+    shifted = jnp.asarray(40 + (np.arange(32) % 8), jnp.int32)  # region B
+    scores = []
+    for _ in range(8):
+        state = ts.update_telemetry(state, shifted, on, on, hops, on)
+        scores.append(float(ts.drift_score(state)))
+    assert all(b >= a - 1e-6 for a, b in zip(scores, scores[1:])), scores
+    assert scores[-1] > 0.5
+
+
+def test_telemetry_roundtrip_byte_identical():
+    state = ts.init_telemetry(NB)
+    for hashes, used, won, hops, real in _rand_batches(5, 7):
+        state = ts.update_telemetry(state, jnp.asarray(hashes),
+                                    jnp.asarray(used), jnp.asarray(won),
+                                    jnp.asarray(hops), jnp.asarray(real))
+    back = ts.telemetry_from_arrays(ts.telemetry_to_arrays(state))
+    for f in dataclasses.fields(ts.TelemetryState):
+        a = np.asarray(getattr(state, f.name))
+        b = np.asarray(getattr(back, f.name))
+        assert a.dtype == b.dtype and np.array_equal(a, b), f.name
+    assert ts.telemetry_from_arrays({}) is None
+
+
+# ------------------------------------------------------------------ policy
+def _publish_n(state, n, bucket=0, tag=-1):
+    h = jnp.full((n,), bucket, jnp.int32)
+    d = jnp.arange(10, 10 + n, dtype=jnp.int32)
+    return bk.publish(state, h, d, jnp.full((n,), tag, jnp.int32))
+
+
+def test_ttl_evict_ages_on_publish_clock():
+    state = _publish_n(bk.make_buckets(4, 8), 5)      # stamps 0..4, step 5
+    out, n = pol.ttl_evict(state, ttl_steps=3)        # cutoff: stamp < 2
+    assert n == 2
+    ids = np.asarray(out.ids)
+    assert set(ids[ids >= 0].tolist()) == {12, 13, 14}
+    # cleared slots must be fully reset (id, stamp AND tag)
+    cleared = ids == -1
+    assert np.all(np.asarray(out.stamp)[cleared] == -1)
+    assert np.all(np.asarray(out.tag)[cleared] == -1)
+    assert pol.ttl_evict(state, ttl_steps=0) == (state, 0)
+
+
+def test_drift_flush_clears_shifted_regions_only():
+    buckets = _publish_n(bk.make_buckets(NB, 4), 3, bucket=2)
+    buckets = _publish_n(buckets, 3, bucket=50)
+    # telemetry says traffic moved from bucket 2 to bucket 50
+    tel = dataclasses.replace(
+        ts.init_telemetry(NB),
+        recent=jnp.zeros(NB).at[50].set(100.0),
+        longrun=jnp.zeros(NB).at[2].set(100.0))
+    cfg = PolicyConfig()
+    assert float(ts.drift_score(tel)) > cfg.drift_threshold
+    out, n_flushed, triggered = pol.drift_flush(buckets, tel, cfg)
+    assert triggered and n_flushed == 6
+    assert np.all(np.asarray(out.ids)[[2, 50]] == -1)
+    # no drift -> untouched
+    calm = dataclasses.replace(tel, longrun=tel.recent)
+    out2, n2, trig2 = pol.drift_flush(buckets, calm, cfg)
+    assert not trig2 and n2 == 0 and out2 is buckets
+
+
+def test_gate_decision_hysteresis():
+    cfg = PolicyConfig(gate_low=0.04, gate_high=0.08, min_batches=2,
+                       min_base=1)
+    assert pol.gate_decision(None, True, cfg, 99, 99) is True
+    assert pol.gate_decision(0.01, True, cfg, 1, 1) is True    # no evidence
+    assert pol.gate_decision(0.01, True, cfg, 2, 1) is False   # below low
+    assert pol.gate_decision(0.06, True, cfg, 9, 9) is True    # hysteresis
+    assert pol.gate_decision(0.06, False, cfg, 9, 9) is False  # below high
+    assert pol.gate_decision(0.09, False, cfg, 9, 9) is True
+
+
+# -------------------------------------------------------------- maintainer
+def _fake_stats(b, hops):
+    on = np.ones(b, bool)
+    return SearchStats(hops=np.full(b, hops, np.float32),
+                       ndists=np.full(b, 1, np.int64), used=on, won=on)
+
+
+def test_maintainer_gates_off_and_probes_back_on(corpus):
+    data, _, _ = corpus
+    eng = VectorSearchEngine(mode="catapult", vamana=VP_TINY,
+                             seed=0).build(data[:256])
+    cfg = PolicyConfig(observe_every=1, baseline_every=3, probe_every=2,
+                       min_batches=2, min_base=1, win_alpha=0.5,
+                       gate_low=0.04, gate_high=0.08)
+    m = CatapultMaintainer(eng, cfg, tick_every=2)
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(16, data.shape[1])).astype(np.float32)
+
+    # catapult batches at 10 hops, then a shadow batch also at 10 hops:
+    # measured saving 0 -> the tick gates catapults off
+    for _ in range(3):
+        assert eng.catapult_active
+        m.observe(q, _fake_stats(16, 10.0))
+    # shadow armed for the next batch: a transient dispatch override,
+    # NOT the persistent gate flag (which save() would persist)
+    assert not eng.catapult_active and eng.catapult_enabled
+    m.observe(q, _fake_stats(16, 10.0))      # folds the diskann baseline
+    assert eng.catapult_active               # shadow done, dispatch restored
+    m.observe(q, _fake_stats(16, 10.0))      # tick -> saving 0 -> gate off
+    assert not eng.catapult_enabled and not m.catapult_enabled
+
+    # gated-off batches are cheap counters until a probe is armed...
+    m.observe(q, _fake_stats(16, 10.0))
+    m.observe(q, _fake_stats(16, 10.0))
+    assert eng.catapult_active and not eng.catapult_enabled
+    assert m.probes == 1                     # probe armed, gate still off
+    # ...and a probe showing real savings re-admits catapults
+    m.observe(q, _fake_stats(16, 5.0))
+    assert eng.catapult_enabled and m.catapult_enabled
+    assert eng.catapult_override is None
+    assert m.gate_transitions == 2
+
+
+def test_maintainer_drift_flush_and_histograms(corpus):
+    data, centers, _ = corpus
+    eng = VectorSearchEngine(mode="catapult", vamana=VP_TINY,
+                             seed=0).build(data[:256])
+    cfg = PolicyConfig(observe_every=1, baseline_every=10**6,
+                       fast_decay=0.4)
+    m = CatapultMaintainer(eng, cfg, tick_every=10**6)  # manual ticks
+    rng = np.random.default_rng(1)
+    d = data.shape[1]
+    around_a = (centers[0] + 0.1 * rng.normal(size=(12, 64, d))
+                ).astype(np.float32)
+    around_b = (-centers[0] + 0.1 * rng.normal(size=(12, 64, d))
+                ).astype(np.float32)
+    for q in around_a:
+        ids, _, st = eng.search(q, k=4)
+        m.observe(q, st)
+    m.tick()
+    assert m.drift < 0.3 and m.drift_flushes == 0
+    for q in around_b:
+        ids, _, st = eng.search(q, k=4)
+        m.observe(q, st)
+    assert m.drift > PolicyConfig().drift_threshold
+    m.tick()
+    assert m.drift_flushes == 1 and m.flushed_entries > 0
+    # the long-run histogram was realigned: the same shift cannot
+    # re-trigger a flush on the very next tick
+    m.tick()
+    assert m.drift_flushes == 1
+
+
+def test_maintainer_rejects_non_catapult_engine(diskann_engine):
+    with pytest.raises(ValueError):
+        CatapultMaintainer(diskann_engine)
+
+
+# ---------------------------------------------------------------- frontend
+def test_frontend_masks_padded_lanes_out_of_publishes(corpus):
+    """Bucket state after a padded frontend dispatch must equal a direct
+    unpadded search of the same queries — padding must not publish."""
+    data, _, _ = corpus
+    rng = np.random.default_rng(3)
+    q = (data[:3] + 0.05 * rng.normal(size=(3, data.shape[1]))
+         ).astype(np.float32)
+    twin = {}
+    for key in ("frontend", "direct"):
+        twin[key] = VectorSearchEngine(mode="catapult", vamana=VP_TINY,
+                                       seed=0).build(data[:512])
+    fe = VectorSearchFrontend(twin["frontend"], k=4, max_batch=8)
+    tickets = [fe.submit(x) for x in q]
+    out = fe.flush()
+    assert set(out) == set(tickets)
+    twin["direct"].search(q, k=4)
+    got = twin["frontend"]._cat.buckets
+    want = twin["direct"]._cat.buckets
+    assert int(got.step) == int(want.step)
+    for field in ("ids", "stamp", "tag"):
+        assert np.array_equal(np.asarray(getattr(got, field)),
+                              np.asarray(getattr(want, field))), field
+    # bulk path trims stats to the real lanes
+    _, _, stats = fe.search(q)
+    assert stats[0].hops.shape == (3,) and stats[0].won.shape == (3,)
+
+
+def test_publish_mask_all_false_freezes_buckets_and_stats(catapult_engine,
+                                                          queries):
+    before = catapult_engine._cat.buckets
+    mask = np.zeros(queries.shape[0], bool)
+    _, _, st = catapult_engine.search(queries, k=4, publish_mask=mask)
+    after = catapult_engine._cat.buckets
+    assert int(after.step) == int(before.step)
+    assert np.array_equal(np.asarray(after.ids), np.asarray(before.ids))
+    assert not st.used.any() and not st.won.any()
+
+
+def test_gated_engine_dispatches_diskann_path(catapult_engine, queries):
+    step_before = int(catapult_engine._cat.buckets.step)
+    catapult_engine.catapult_enabled = False
+    try:
+        ids, _, st = catapult_engine.search(queries, k=4)
+        assert not st.used.any() and not st.won.any()
+        assert int(catapult_engine._cat.buckets.step) == step_before
+        assert (ids[:, 0] >= 0).all()
+    finally:
+        catapult_engine.catapult_enabled = True
+
+
+# ----------------------------------------------------------------- persist
+def test_sharded_save_load_roundtrips_adapt_state_byte_identically():
+    from repro.store.sharded_store import ShardedDiskVectorSearchEngine
+    rng = np.random.default_rng(11)
+    data = rng.normal(size=(240, 16)).astype(np.float32)
+    qs = data[:64] + 0.05 * rng.normal(size=(64, 16)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as td:
+        eng = ShardedDiskVectorSearchEngine(
+            store_dir=os.path.join(td, "s"), n_shards=2, vamana=VP_TINY,
+            seed=0, cache_frames=16)
+        eng.build(data)
+        m = CatapultMaintainer(eng, PolicyConfig(observe_every=1),
+                               tick_every=4)
+        for lo in range(0, 64, 16):
+            _, _, st = eng.search(qs[lo: lo + 16], k=4)
+            m.observe(qs[lo: lo + 16], st)
+        eng.catapult_enabled = False
+        eng.save()
+        re = ShardedDiskVectorSearchEngine.load(os.path.join(td, "s"))
+        assert re.catapult_enabled is False
+        for a, b in zip(eng.shards, re.shards):
+            assert b.adapt_state is not None
+            for f in dataclasses.fields(ts.TelemetryState):
+                x = np.asarray(getattr(a.adapt_state, f.name))
+                y = np.asarray(getattr(b.adapt_state, f.name))
+                assert x.dtype == y.dtype and np.array_equal(x, y), f.name
+        # a maintainer over the reopened index resumes, not restarts
+        m2 = CatapultMaintainer(re)
+        assert m2.catapult_enabled is False
+        assert int(m2._units[0].adapt_state.n_queries) > 0
+        re.close()
+        eng.close()
+
+
+def test_disk_engine_adapt_sidecar_roundtrip():
+    from repro.store.io_engine import DiskVectorSearchEngine
+    rng = np.random.default_rng(12)
+    data = rng.normal(size=(200, 16)).astype(np.float32)
+    qs = data[:32] + 0.05 * rng.normal(size=(32, 16)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "x.ctpl")
+        eng = DiskVectorSearchEngine(mode="catapult", vamana=VP_TINY,
+                                     seed=0, cache_frames=16,
+                                     store_path=path).build(data)
+        # no adapt layer -> no sidecar, reopen starts cold (old behaviour)
+        eng.save()
+        assert not os.path.exists(path + ".adapt.npz")
+        m = CatapultMaintainer(eng, PolicyConfig(observe_every=1))
+        _, _, st = eng.search(qs, k=4)
+        m.observe(qs, st)
+        eng.save()
+        re = DiskVectorSearchEngine.load(path)
+        assert re.adapt_state is not None
+        assert np.array_equal(np.asarray(re._cat.buckets.ids),
+                              np.asarray(eng._cat.buckets.ids))
+        assert np.array_equal(np.asarray(re.adapt_state.recent),
+                              np.asarray(eng.adapt_state.recent))
+        re.close()
+        # a save landing mid-shadow persists the GATE, not the override:
+        # the reopened engine must not come up spuriously gated off
+        eng.catapult_override = False        # an armed shadow batch
+        eng.save()
+        eng.catapult_override = None
+        re2 = DiskVectorSearchEngine.load(path)
+        assert re2.catapult_enabled and re2.catapult_override is None
+        re2.close()
+        # dropping the adapt layer removes the sidecar on the next save
+        # (a stale one would resurrect dead shortcuts on a later load)
+        eng.adapt_state = None
+        eng.save()
+        assert not os.path.exists(path + ".adapt.npz")
+        eng.close()
+
+
+def test_fresh_build_clears_stale_adapt_sidecar():
+    from repro.store.io_engine import DiskVectorSearchEngine
+    rng = np.random.default_rng(13)
+    data = rng.normal(size=(150, 16)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "x.ctpl")
+        eng = DiskVectorSearchEngine(mode="catapult", vamana=VP_TINY,
+                                     seed=0, cache_frames=16,
+                                     store_path=path).build(data)
+        m = CatapultMaintainer(eng, PolicyConfig(observe_every=1))
+        q = data[:16]
+        _, _, st = eng.search(q, k=4)
+        m.observe(q, st)
+        eng.save()
+        assert os.path.exists(path + ".adapt.npz")
+        eng.close()
+        # a NEW index at the same path owns it outright — the previous
+        # life's bucket snapshot must not leak into this one
+        eng2 = DiskVectorSearchEngine(mode="catapult", vamana=VP_TINY,
+                                      seed=1, cache_frames=16,
+                                      store_path=path).build(data)
+        assert not os.path.exists(path + ".adapt.npz")
+        assert int(eng2._cat.buckets.step) == 0
+        eng2.close()
+
+
+def test_sharded_save_writes_no_per_shard_sidecars():
+    """Adapt state of a sharded store lives in .buckets.npz + manifest
+    only — a second copy per shard could silently diverge."""
+    from repro.store.sharded_store import ShardedDiskVectorSearchEngine
+    rng = np.random.default_rng(14)
+    data = rng.normal(size=(200, 16)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as td:
+        eng = ShardedDiskVectorSearchEngine(
+            store_dir=os.path.join(td, "s"), n_shards=2, vamana=VP_TINY,
+            seed=0, cache_frames=16)
+        eng.build(data)
+        m = CatapultMaintainer(eng, PolicyConfig(observe_every=1))
+        q = data[:16]
+        _, _, st = eng.search(q, k=4)
+        m.observe(q, st)
+        eng.save()
+        stray = [f for f in os.listdir(os.path.join(td, "s"))
+                 if f.endswith(".adapt.npz")]
+        assert stray == [], stray
+        re = ShardedDiskVectorSearchEngine.load(os.path.join(td, "s"))
+        assert all(s.adapt_state is not None for s in re.shards)
+        re.close()
+        eng.close()
+
+
+# --------------------------------------------------------- regression gate
+def test_check_regression_names_missing_metrics():
+    from benchmarks.check_regression import check
+    baseline = {"results": {"row": {"block_reads": 2.0, "recall": 0.9}},
+                "gates": ["row"]}
+    fresh = {"results": {"row": {"recall": 0.9}}}
+    failures = check(fresh, baseline)
+    assert any("'block_reads'" in f and "fresh row" in f
+               for f in failures), failures
+    # unrecognized baseline rows are a configuration error, not a pass
+    empty = {"results": {"row": {"us_per_call": 1.0}}, "gates": ["row"]}
+    assert any("none of the gated metrics" in f
+               for f in check(fresh, empty))
+
+
+def test_check_regression_adapt_gates():
+    from benchmarks.check_regression import check
+    def row(rec, budget=1024):
+        return {"post_shift_recovery_queries": rec,
+                "recovery_budget_queries": budget, "window_queries": 128}
+    base = {"results": {"fig7_adapt/sudden/adaptive": row(256),
+                        "fig7_adapt/stationary/uniform":
+                            {"stationary_overhead_pct": 0.5}},
+            "gates": ["fig7_adapt/sudden/adaptive",
+                      "fig7_adapt/stationary/uniform"]}
+    ok = {"results": {"fig7_adapt/sudden/adaptive": row(384),
+                      "fig7_adapt/sudden/frozen": row(-1),
+                      "fig7_adapt/stationary/uniform":
+                          {"stationary_overhead_pct": 1.0}}}
+    assert check(ok, base) == []
+    never = {"results": {"fig7_adapt/sudden/adaptive": row(-1),
+                         "fig7_adapt/sudden/frozen": row(-1),
+                         "fig7_adapt/stationary/uniform":
+                             {"stationary_overhead_pct": 1.0}}}
+    assert any("never recovered" in f for f in check(never, base))
+    slow = {"results": {"fig7_adapt/sudden/adaptive": row(1024),
+                        "fig7_adapt/sudden/frozen": row(-1),
+                        "fig7_adapt/stationary/uniform":
+                            {"stationary_overhead_pct": 1.0}}}
+    assert any("recovery took" in f for f in check(slow, base))
+    heavy = {"results": {"fig7_adapt/sudden/adaptive": row(256),
+                         "fig7_adapt/sudden/frozen": row(-1),
+                         "fig7_adapt/stationary/uniform":
+                             {"stationary_overhead_pct": 3.5}}}
+    assert any("stationary" in f for f in check(heavy, base))
+    vacuous = {"results": {"fig7_adapt/sudden/adaptive": row(256),
+                           "fig7_adapt/sudden/frozen": row(512),
+                           "fig7_adapt/stationary/uniform":
+                               {"stationary_overhead_pct": 1.0}}}
+    assert any("vacuous" in f for f in check(vacuous, base))

@@ -102,3 +102,48 @@ def test_evict_ids_flushes_dead_destinations():
     assert int(state.step) == step_before
     # stamps of cleared slots are reset so they evict first on reuse
     assert np.asarray(state.stamp)[ids == -1].max(initial=-1) == -1
+
+
+def test_evict_ids_resets_tag_no_ghost_label_match():
+    """Regression: an evicted slot must reset its filter tag too — a
+    surviving tag would let a later filtered lookup treat the empty
+    slot as a predicate match (a "ghost" of the deleted destination)."""
+    state = bk.make_buckets(2, 3)
+    state = bk.publish(state, jnp.zeros((2,), jnp.int32),
+                       jnp.asarray([10, 11], jnp.int32),
+                       jnp.asarray([5, 7], jnp.int32))     # tagged entries
+    state = bk.evict_ids(state, jnp.asarray([10], jnp.int32))
+    ids = np.asarray(state.ids)
+    tags = np.asarray(state.tag)
+    assert np.all(tags[ids == -1] == -1), "ghost tag survived eviction"
+    assert tags[ids == 11].tolist() == [7], "live tag lost"
+    # the filtered-lookup validity rule (catapult.py): a cleared slot
+    # must never satisfy "ids >= 0 and tag matches" for ANY label
+    cat_ids, cat_tags = bk.lookup(state, jnp.zeros((1,), jnp.int32))
+    ghost = (np.asarray(cat_ids)[0] < 0) & (np.asarray(cat_tags)[0] == 5)
+    assert not ghost.any()
+
+
+def test_evict_stale_ttl_clock():
+    """evict_stale ages on the publish clock: entries older than
+    step - max_age clear in full (id, stamp, tag)."""
+    state = bk.make_buckets(2, 8)
+    state = bk.publish(state, jnp.zeros((5,), jnp.int32),
+                       jnp.asarray([1, 2, 3, 4, 5], jnp.int32),
+                       jnp.full((5,), 9, jnp.int32))       # stamps 0..4
+    out = bk.evict_stale(state, jnp.int32(3))              # cutoff: < 2
+    ids = np.asarray(out.ids)
+    assert set(ids[ids >= 0].tolist()) == {3, 4, 5}
+    assert np.all(np.asarray(out.tag)[ids == -1] == -1)
+    assert int(out.step) == int(state.step)
+
+
+def test_evict_buckets_row_flush():
+    state = bk.make_buckets(4, 2)
+    state = bk.publish(state, jnp.asarray([0, 2], jnp.int32),
+                       jnp.asarray([7, 8], jnp.int32),
+                       jnp.full((2,), -1, jnp.int32))
+    out = bk.evict_buckets(state, jnp.asarray([True, False, False, False]))
+    ids = np.asarray(out.ids)
+    assert np.all(ids[0] == -1), "flushed row survived"
+    assert 8 in ids[2].tolist(), "untouched row lost its entry"
