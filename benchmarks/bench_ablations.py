@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import VP, make_engine, shared_graph
+from benchmarks.common import VP, make_db, shared_graph
 from repro.core import brute_force_knn, recall_at_k
 from repro.core.beam_search import SearchSpec, beam_search_l2
 from repro.core import buckets as bk
@@ -58,7 +58,7 @@ def run(n=8_000, n_queries=2_048, k=4) -> list[str]:
                f"{np.mean(rec_without):.3f}")
 
     # --- serendipity: unseen queries in warm regions
-    eng = make_engine(wl, "catapult")
+    eng = make_db(wl, "catapult")
     warm = wl.queries[: n_queries // 2]
     for lo in range(0, warm.shape[0], 256):
         eng.search(warm[lo: lo + 256], k=k, beam_width=max(k, 2))
@@ -74,7 +74,7 @@ def run(n=8_000, n_queries=2_048, k=4) -> list[str]:
                f"hops={st.hops.mean():.1f}")
 
     # --- won rate across k (stricter-than-usage benefit measure)
-    eng2 = make_engine(wl, "catapult")
+    eng2 = make_db(wl, "catapult")
     for kk in (1, 8):
         for rep in range(2):
             _, _, st = eng2.search(wl.queries[:1024], k=kk,

@@ -32,6 +32,7 @@ CLI: ``--quick`` (CI-sized), ``--json PATH`` (regression-gate artifact).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -39,10 +40,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.bench_disk import rows_to_json
-from benchmarks.common import VP
-from repro.adapt import CatapultMaintainer, PolicyConfig
-from repro.core import (VectorSearchEngine, brute_force_knn,
-                        proximity_cache as pc, recall_at_k)
+from benchmarks.common import SPEC, VP
+from repro import db as catapultdb
+from repro.adapt import PolicyConfig
+from repro.core import (brute_force_knn, proximity_cache as pc,
+                        recall_at_k)
 from repro.core.vamana import build_vamana
 from repro.data.workloads import make_shifted_zipf, make_uniform
 
@@ -187,28 +189,31 @@ def run_shift(n=4_000, n_queries=2_048) -> list[str]:
         truth = brute_force_knn(wl.corpus, wl.queries[:nb], K)
 
         def engine(mode="catapult"):
-            return VectorSearchEngine(mode=mode, vamana=VP, seed=0).build(
-                wl.corpus, prebuilt=prebuilt)
+            """One facade-constructed database per system; the replay
+            machinery below drives its backend engine directly (bucket
+            freezing and dispatch overrides are sub-API surgery)."""
+            spec = dataclasses.replace(SPEC, mode=mode, seed=0)
+            return catapultdb.create(spec, wl.corpus, prebuilt=prebuilt)
 
         systems = {}
-        eng = engine()
-        m = CatapultMaintainer(eng, SHIFT_POLICY,
-                               tick_every=SHIFT_TICK_EVERY)
-        _warm(eng, wl.queries, maintainer=m)
-        w, h, ids, dt = replay(eng, wl.queries, maintainer=m)
+        db = engine()
+        m = db.attach_maintainer(SHIFT_POLICY,
+                                 tick_every=SHIFT_TICK_EVERY)
+        _warm(db.backend, wl.queries, maintainer=m)
+        w, h, ids, dt = replay(db.backend, wl.queries, maintainer=m)
         systems["adaptive"] = (w, h, ids, dt, m)
 
-        eng = engine()
+        eng = engine().backend
         _warm(eng, wl.queries)
         systems["catapult"] = (*replay(eng, wl.queries), None)
 
-        eng = engine()
+        eng = engine().backend
         _warm(eng, wl.queries)
         # warm the table on the first half of phase A, then pin it
         systems["frozen"] = (*replay(eng, wl.queries,
                                      freeze_at=shift_batch // 2), None)
 
-        eng = engine(mode="diskann")
+        eng = engine(mode="diskann").backend
         _warm(eng, wl.queries)
         w, ids, dt = replay_proximity(eng, wl.queries)
         systems["proximity"] = (w, np.zeros_like(w), ids, dt, None)
@@ -254,11 +259,11 @@ def run_stationary(n=4_000, n_queries=2_048, repeats=5) -> list[str]:
         return rng.uniform(-1, 1, size=(nb, wl.queries.shape[1])
                            ).astype(np.float32) * 4.0
 
-    plain = VectorSearchEngine(mode="catapult", vamana=VP, seed=0).build(
-        wl.corpus, prebuilt=prebuilt)
-    adapt = VectorSearchEngine(mode="catapult", vamana=VP, seed=0).build(
-        wl.corpus, prebuilt=prebuilt)
-    m = CatapultMaintainer(adapt)       # production defaults — see above
+    spec = dataclasses.replace(SPEC, mode="catapult", seed=0)
+    plain = catapultdb.create(spec, wl.corpus, prebuilt=prebuilt).backend
+    adapt_db = catapultdb.create(spec, wl.corpus, prebuilt=prebuilt)
+    adapt = adapt_db.backend
+    m = adapt_db.attach_maintainer(PolicyConfig())  # production defaults
 
     # settle: lets the gate reach its verdict (shadow baselines need
     # baseline_every batches to arrive) and compiles BOTH dispatch

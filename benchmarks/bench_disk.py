@@ -34,6 +34,7 @@ results for the bench-regression gate, see check_regression.py).
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import tempfile
@@ -41,11 +42,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import VP, shared_graph
+from benchmarks.common import SPEC, make_db
+from repro import db as catapultdb
 from repro.core import brute_force_knn, recall_at_k
 from repro.data.workloads import Workload, make_medrag_zipf, make_uniform
-from repro.store.io_engine import DiskVectorSearchEngine
-from repro.store.sharded_store import ShardedDiskVectorSearchEngine
 
 SYSTEMS = ("diskann", "catapult")
 SHARD_SWEEP = (1, 2, 4)
@@ -58,21 +58,16 @@ BEAM = 2 * K
 BATCH = 256
 
 
-def _cache_stats(eng):
-    """Aggregate CacheStats for either disk-engine flavour."""
-    return eng.cache_stats if hasattr(eng, "cache_stats") else eng.cache.stats
-
-
-def stream_disk(eng, wl: Workload, *, k: int, name: str,
+def stream_disk(db: catapultdb.Database, wl: Workload, *, k: int, name: str,
                 truth: np.ndarray, extra: str = "") -> str:
     q = wl.queries
     n = (q.shape[0] // BATCH) * BATCH
-    eng.search(q[:BATCH], k=k, beam_width=BEAM)   # jit warm-up
-    eng.reset_io()                                # ...but measure cold
+    db.search(q[:BATCH], k=k, beam_width=BEAM)    # jit warm-up
+    db.reset_io()                                 # ...but measure cold
     all_ids, hops, reads, hits = [], [], [], []
     t0 = time.perf_counter()
     for lo in range(0, n, BATCH):
-        ids, _, st = eng.search(q[lo: lo + BATCH], k=k, beam_width=BEAM)
+        ids, _, st = db.search(q[lo: lo + BATCH], k=k, beam_width=BEAM)
         all_ids.append(ids)
         hops.append(st.hops)
         reads.append(st.block_reads)
@@ -81,7 +76,7 @@ def stream_disk(eng, wl: Workload, *, k: int, name: str,
     ids = np.concatenate(all_ids)
     reads = np.concatenate(reads).astype(np.float64)
     hits = np.concatenate(hits).astype(np.float64)
-    cs = _cache_stats(eng)
+    cs = db.cache_stats
     derived = (f"block_reads={reads.mean():.2f};"
                f"hit_rate={hits.sum() / max((hits + reads).sum(), 1):.3f};"
                f"recall={recall_at_k(ids, truth):.3f};"
@@ -103,22 +98,21 @@ def run(n=8_000, n_queries=2_048) -> list[str]:
     # strategy absorbs part of the traversal)
     regimes = (("cold", lambda _n: 2), ("warm", lambda _n: max(256, _n // 16)))
     for wl in workloads:
-        prebuilt = shared_graph(wl)
         n_q = (wl.queries.shape[0] // BATCH) * BATCH
         truth = brute_force_knn(wl.corpus, wl.queries[:n_q], K)
         for regime, frames_of in regimes:
             for mode in SYSTEMS:
                 with tempfile.TemporaryDirectory() as td:
-                    eng = DiskVectorSearchEngine(
-                        mode=mode, vamana=VP, seed=0,
+                    db = make_db(
+                        wl, mode, tier="disk", seed=0,
                         cache_frames=frames_of(n),
                         store_path=os.path.join(td, f"{wl.name}.ctpl"))
-                    eng.build(wl.corpus, prebuilt=prebuilt)
                     out.append(stream_disk(
-                        eng, wl, k=K, truth=truth,
+                        db, wl, k=K, truth=truth,
                         name=f"fig12_disk/{wl.name}/{regime}/{mode}/k{K}"))
-                    eng.close()
+                    db.close()
     out.extend(run_sharded(n=n, n_queries=n_queries))
+    out.extend(run_facade_warmup())
     # fig2_disk/*: the mutable-tier story (insert/delete/consolidate
     # recall + I/O) rides in the same artifact so check_regression can
     # gate post-delete recall alongside the block-read claims.
@@ -143,18 +137,51 @@ def run_sharded(n=8_000, n_queries=2_048) -> list[str]:
     total_frames = max(256, n // 16)
     for s in SHARD_SWEEP:
         with tempfile.TemporaryDirectory() as td:
-            eng = ShardedDiskVectorSearchEngine(
-                store_dir=os.path.join(td, f"s{s}"), n_shards=s,
-                mode="catapult", vamana=VP, seed=0,
-                cache_frames=total_frames // s)
-            eng.build(wl.corpus)
-            max_shard_rows = max(e.n_active for e in eng.shards)
+            db = make_db(wl, "catapult", tier="sharded", seed=0,
+                         n_shards=s, cache_frames=total_frames // s,
+                         store_path=os.path.join(td, f"s{s}"))
+            max_shard_rows = max(e.n_active for e in db.backend.shards)
             out.append(stream_disk(
-                eng, wl, k=K, truth=truth,
+                db, wl, k=K, truth=truth,
                 name=f"fig12_sharded/{wl.name}/S{s}/catapult/k{K}",
                 extra=f"shards={s};max_shard_rows={max_shard_rows}"))
-            eng.close()
+            db.close()
     return out
+
+
+def run_facade_warmup(n=2_500, n_queries=512) -> list[str]:
+    """facade/warmup/* — the facade's open-time jit pre-warm, measured.
+
+    ``create()`` with declared ``warm_batch_shapes`` compiles the
+    serving signatures before the handle is returned; the row reports
+    ``warmup_ms`` (compile cost paid at open) against
+    ``first_query_warm_ms`` (the first REAL query after).  The
+    regression gate (check_regression.py) enforces the claim
+    machine-independently: the first query must cost a small fraction
+    of the warmup it no longer pays.
+
+    The corpus geometry (n, d=32) is deliberately unique within this
+    module: jit caching is process-wide and keyed on array shapes, so
+    reusing the fig12 geometry would let the earlier sections pay the
+    compile and fake a near-zero warmup here.
+    """
+    wl = make_medrag_zipf(n=n, n_queries=n_queries, d=32)
+    with tempfile.TemporaryDirectory() as td:
+        spec = dataclasses.replace(
+            SPEC, tier="disk", mode="catapult",
+            path=os.path.join(td, "warm.ctpl"), k=K, beam_width=BEAM,
+            warm_batch_shapes=(BATCH,))
+        db = catapultdb.create(spec, wl.corpus)
+        warm_ms = db.last_warm_ms
+        t0 = time.perf_counter()
+        ids, _, _ = db.search(wl.queries[:BATCH], k=K, beam_width=BEAM)
+        first_ms = (time.perf_counter() - t0) * 1e3
+        truth = brute_force_knn(wl.corpus, wl.queries[:BATCH], K)
+        rec = recall_at_k(ids, truth)
+        db.close()
+    return [f"facade/warmup/disk/k{K},{first_ms * 1e3 / BATCH:.1f},"
+            f"warmup_ms={warm_ms:.1f};first_query_warm_ms={first_ms:.2f};"
+            f"recall={rec:.3f}"]
 
 
 def rows_to_json(rows: list[str]) -> dict:

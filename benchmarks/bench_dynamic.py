@@ -26,8 +26,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import VP
-from repro.core import VectorSearchEngine, brute_force_knn, recall_at_k
+from benchmarks.common import make_db
+from repro.core import brute_force_knn, recall_at_k
 from repro.core import proximity_cache as pc
 from repro.data.workloads import make_medrag_zipf
 
@@ -42,10 +42,8 @@ def run(n=6_000, n_queries=1_000, k=5, batch=50, insert_every=50,
     rng = np.random.default_rng(9)
     out = []
     for dynamic in (False, True):
-        eng = VectorSearchEngine(mode="diskann", vamana=VP,
-                                 capacity=n + 8_000).build(wl.corpus)
-        cat = VectorSearchEngine(mode="catapult", vamana=VP,
-                                 capacity=n + 8_000).build(wl.corpus)
+        eng = make_db(wl, "diskann", spare_capacity=8_000)
+        cat = make_db(wl, "catapult", spare_capacity=8_000)
         cache = pc.make_cache(capacity=512, dim=wl.corpus.shape[1], k=k)
         cache_rec, cat_rec = [], []
         for lo in range(0, n_queries, batch):
@@ -55,8 +53,8 @@ def run(n=6_000, n_queries=1_000, k=5, batch=50, insert_every=50,
                 centers = q[rng.integers(0, q.shape[0], insert_batch)]
                 newv = centers + 0.05 * rng.normal(
                     size=(insert_batch, q.shape[1])).astype(np.float32)
-                eng.insert(newv.astype(np.float32))
-                cat.insert(newv.astype(np.float32))
+                eng.upsert(newv.astype(np.float32))
+                cat.upsert(newv.astype(np.float32))
             # Proximity path: probe; misses go to the (DiskANN) engine
             hit = pc.cache_probe(cache, jnp.asarray(q), jnp.float32(tau))
             ids_db, _, _ = eng.search(q, k=k, beam_width=2 * k)
@@ -66,7 +64,7 @@ def run(n=6_000, n_queries=1_000, k=5, batch=50, insert_every=50,
                                     jnp.asarray(ids_db),
                                     ~jnp.asarray(hit.hit))
             ids_cat, _, _ = cat.search(q, k=k, beam_width=2 * k)
-            truth = brute_force_knn(eng._vec_np[: eng.n_active], q, k)
+            truth = brute_force_knn(eng.vectors, q, k)
             for row in range(q.shape[0]):
                 cache_rec.append(recall_at_k(served[row: row + 1],
                                              truth[row: row + 1]))
@@ -97,24 +95,21 @@ def run_disk(n=4_000, n_queries=1_024, k=8, insert_batch=200,
             ).astype(np.float32)
     n_del = int(n * delete_frac)
     out = []
-    from repro.store.io_engine import DiskVectorSearchEngine
     for mode in ("diskann", "catapult"):
         with tempfile.TemporaryDirectory() as td:
-            eng = DiskVectorSearchEngine(
-                mode=mode, vamana=VP, seed=0, capacity=n + insert_batch,
-                cache_frames=max(256, n // 16),
-                store_path=os.path.join(td, "dyn.ctpl"))
-            eng.build(wl.corpus)
-            eng.search(q, k=k, beam_width=2 * k)      # jit warm-up
-            eng.reset_io()
+            db = make_db(wl, mode, tier="disk", seed=0,
+                         spare_capacity=insert_batch,
+                         cache_frames=max(256, n // 16),
+                         store_path=os.path.join(td, "dyn.ctpl"))
+            db.search(q, k=k, beam_width=2 * k)       # jit warm-up
+            db.reset_io()
 
             def phase():
                 t0 = time.perf_counter()
-                ids, _, st = eng.search(q, k=k, beam_width=2 * k)
+                ids, _, st = db.search(q, k=k, beam_width=2 * k)
                 dt = time.perf_counter() - t0
-                pool = eng._vec_np[: eng.n_active]
-                dead = np.nonzero(eng._tomb_np[: eng.n_active])[0]
-                truth = brute_force_knn(np.asarray(pool), q, k,
+                dead = np.nonzero(db.tombstones)[0]
+                truth = brute_force_knn(np.asarray(db.vectors), q, k,
                                         exclude=dead if dead.size else None)
                 leaked = int(np.isin(ids, dead).sum()) if dead.size else 0
                 return (recall_at_k(ids, truth),
@@ -122,12 +117,12 @@ def run_disk(n=4_000, n_queries=1_024, k=8, insert_batch=200,
                         dt / q.shape[0] * 1e6)
 
             r0, b0, _, us = phase()
-            eng.insert_batch(newv)
+            db.upsert(newv)
             r1, b1, _, _ = phase()
             dels = rng.choice(n, size=n_del, replace=False)
-            eng.delete(dels)
+            db.delete(dels)
             r2, b2, leak2, _ = phase()
-            eng.consolidate()
+            db.consolidate()
             r3, b3, leak3, _ = phase()
             out.append(
                 f"fig2_disk/{wl.name}/{mode}/k{k},{us:.1f},"
@@ -137,7 +132,7 @@ def run_disk(n=4_000, n_queries=1_024, k=8, insert_batch=200,
                 f"tombstone_leaks={leak2 + leak3};"
                 f"block_reads={b0:.2f};post_delete_block_reads={b2:.2f};"
                 f"post_consolidate_block_reads={b3:.2f}")
-            eng.close()
+            db.close()
     return out
 
 

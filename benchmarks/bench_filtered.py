@@ -13,7 +13,7 @@ import argparse
 import os
 import tempfile
 
-from benchmarks.common import emit, make_engine, stream
+from benchmarks.common import emit, make_db, stream
 from repro.data.workloads import make_papers
 
 K_SWEEP = (1, 4, 8, 16)
@@ -25,15 +25,15 @@ def run(n=8_000, n_queries=2_048, backend: str = "ram") -> list[str]:
     rows = []
     with tempfile.TemporaryDirectory() as td:
         for mode in ("diskann", "catapult"):
-            eng = make_engine(
-                wl, mode, backend=backend,
+            db = make_db(
+                wl, mode, tier=backend,
                 store_path=os.path.join(td, f"{mode}.ctpl")
                 if backend == "disk" else None)
             for k in K_SWEEP:
-                rows.append(stream(eng, wl, k=k,
+                rows.append(stream(db, wl, k=k,
                                    name=f"{prefix}/{mode}/k{k}"))
             if backend == "disk":
-                eng.close()
+                db.close()
     return emit(rows)
 
 

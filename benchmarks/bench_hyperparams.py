@@ -5,7 +5,7 @@ corner is (b=5, L=2).
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, make_engine, stream
+from benchmarks.common import emit, make_db, stream
 from repro.data.workloads import make_tripclick
 
 B_SWEEP = (5, 10, 20, 40)
@@ -17,7 +17,7 @@ def run(n=10_000, n_queries=2_048, k=8) -> list[str]:
     rows = []
     for b in B_SWEEP:
         for l in L_SWEEP:
-            eng = make_engine(wl, "catapult", n_bits=l, bucket_capacity=b)
+            eng = make_db(wl, "catapult", n_bits=l, bucket_capacity=b)
             rows.append(stream(eng, wl, k=k,
                                name=f"fig11_heatmap/b{b}_L{l}"))
     return emit(rows)

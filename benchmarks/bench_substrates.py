@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import VP, make_engine, stream
+from benchmarks.common import VP, make_db, stream
 from repro.core import brute_force_knn, recall_at_k
 from repro.core.hnsw import HnswEngine
 from repro.data.workloads import make_medrag_zipf
@@ -18,7 +18,7 @@ def run(n=8_000, n_queries=2_048, k=4) -> list[str]:
 
     # DiskANN substrate (from the main harness, for the side-by-side)
     for mode in ("diskann", "catapult"):
-        r = stream(make_engine(wl, mode), wl, k=k,
+        r = stream(make_db(wl, mode), wl, k=k,
                    name=f"substrate/vamana/{mode}/k{k}")
         out.append(f"{r.name},{r.us_per_query:.1f},"
                    f"recall={r.recall:.3f};hops={r.hops:.1f};"

@@ -7,7 +7,7 @@ the paper.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, make_engine, stream
+from benchmarks.common import emit, make_db, stream
 from repro.data.workloads import make_medrag_zipf, make_tripclick, make_uniform
 
 K_SWEEP = (1, 4, 8, 16)
@@ -17,7 +17,7 @@ SYSTEMS = ("diskann", "lsh_apg", "catapult")
 def run_workload(wl, *, corpus_tag: str) -> list[str]:
     rows = []
     for mode in SYSTEMS:
-        eng = make_engine(wl, mode)
+        eng = make_db(wl, mode)
         for k in K_SWEEP:
             rows.append(stream(eng, wl, k=k,
                                name=f"{corpus_tag}/{mode}/k{k}"))

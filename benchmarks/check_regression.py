@@ -18,7 +18,13 @@ baseline entry:
   baseline's recovery,
 * ``stationary_overhead_pct`` — the adapt layer's stationary cost must
   stay under ``STATIONARY_OVERHEAD_MAX`` (absolute, not
-  baseline-relative: the acceptance bar is <2% QPS, full stop).
+  baseline-relative: the acceptance bar is <2% QPS, full stop),
+* ``first_query_warm_ms`` — the facade's warmup claim (facade/warmup
+  rows): the first real query after ``create()``'s jit pre-warm must
+  cost under ``WARMUP_COMPILE_FRACTION`` of the measured ``warmup_ms``
+  — a machine-independent ratio, so a CI runner's absolute speed never
+  fakes a pass or a failure; if the pre-warm stopped covering the hot
+  signature, the first query re-compiles and blows the ratio.
 
 A gated row or gated metric missing from either file is reported as a
 named failure ("metric 'X' missing from baseline row Y"), never a
@@ -55,12 +61,13 @@ MAX_READS_REGRESSION = 0.10  # +10% block reads = regression
 SHARD_PARITY_POINTS = 0.01   # S=4 within 1 recall point of S=1
 STATIONARY_OVERHEAD_MAX = 2.0  # % QPS the adapt layer may cost, absolute
 RECOVERY_SLACK = 1.5         # fresh recovery may take 1.5x the baseline's
+WARMUP_COMPILE_FRACTION = 0.5  # first warm query vs the warmup it skipped
 
 # every metric the gate understands; a gated baseline row carrying none
 # of these is a configuration error, not a pass
 GATE_KEYS = ("block_reads", "recall", "post_delete_recall",
              "tombstone_leaks", "post_shift_recovery_queries",
-             "stationary_overhead_pct")
+             "stationary_overhead_pct", "first_query_warm_ms")
 
 
 def _metric(name: str, row: dict, key: str, side: str,
@@ -139,6 +146,19 @@ def _check_gated_row(name: str, b: dict, c: dict,
                 f"{name}: adapt layer costs {ov:.2f}% QPS on a "
                 f"stationary uniform stream (max "
                 f"{STATIONARY_OVERHEAD_MAX}%)")
+    # facade warmup gate: fresh-run ratio (machine-independent) — the
+    # baseline row's presence opts the row in, its values are context
+    if "first_query_warm_ms" in b:
+        first = _metric(name, c, "first_query_warm_ms", "fresh", failures)
+        warm = _metric(name, c, "warmup_ms", "fresh", failures)
+        if first is not None and warm is not None:
+            ceiling = WARMUP_COMPILE_FRACTION * warm
+            if first > ceiling:
+                failures.append(
+                    f"{name}: first post-warm query took {first:.1f}ms > "
+                    f"{ceiling:.1f}ms ({WARMUP_COMPILE_FRACTION:.0%} of "
+                    f"the {warm:.1f}ms open-time warmup) — the facade "
+                    f"pre-warm no longer covers the serving signature")
 
 
 def check(current: dict, baseline: dict) -> list[str]:

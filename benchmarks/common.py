@@ -1,4 +1,4 @@
-"""Shared benchmark harness: engine construction, streamed search, metrics.
+"""Shared benchmark harness: database construction, streamed search, metrics.
 
 Conventions (mirroring the paper's §4.1.4):
   * `k` is the paper's beam width — it controls both the retrieval count
@@ -12,6 +12,11 @@ Conventions (mirroring the paper's §4.1.4):
     reports DiskANN-relative gains,
   * hops / distance computations are hardware-independent and compared
     against the paper's Fig. 6/9 directly.
+
+Every benchmark constructs its index through ``make_db`` — one
+``repro.db.create`` call parameterized by tier — so the suite measures
+exactly what the public API serves, and an engine never gets
+hand-assembled outside the facade.
 """
 from __future__ import annotations
 
@@ -20,12 +25,17 @@ import time
 
 import numpy as np
 
-from repro.core import (VamanaParams, VectorSearchEngine, brute_force_knn,
-                        recall_at_k)
+from repro import db as catapultdb
+from repro.core import VamanaParams, brute_force_knn, recall_at_k
 from repro.core.vamana import build_vamana
 from repro.data.workloads import Workload
 
 VP = VamanaParams(max_degree=24, build_beam=48, batch=1024)
+
+# the facade spelling of VP + the paper's catapult defaults; benches
+# derive per-run specs from this via dataclasses.replace
+SPEC = catapultdb.IndexSpec(degree=VP.max_degree, build_beam=VP.build_beam,
+                            build_batch=VP.batch)
 
 
 @dataclasses.dataclass
@@ -49,30 +59,28 @@ def shared_graph(wl: Workload):
     return _GRAPH_CACHE[key]
 
 
-def make_engine(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
-                seed=0, backend: str = "ram",
-                store_path: str | None = None) -> VectorSearchEngine:
-    """Engine factory for either tier.  ``backend='disk'`` builds a
-    ``DiskVectorSearchEngine`` on ``store_path`` (required) — the same
-    graph/labels, block-resident, so every benchmark can A/B the tiers
-    with one flag."""
-    if backend == "disk":
-        from repro.store.io_engine import DiskVectorSearchEngine
-        assert store_path is not None, "disk backend needs a store_path"
-        eng = DiskVectorSearchEngine(
-            mode=mode, vamana=VP, n_bits=n_bits,
-            bucket_capacity=bucket_capacity, seed=seed,
-            store_path=store_path)
-    else:
-        eng = VectorSearchEngine(mode=mode, vamana=VP, n_bits=n_bits,
-                                 bucket_capacity=bucket_capacity, seed=seed)
+def make_db(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
+            seed=0, tier: str = "ram", store_path: str | None = None,
+            cache_frames: int = 2048, n_shards: int = 2,
+            spare_capacity: int = 0,
+            warm_batch_shapes: tuple = ()) -> catapultdb.Database:
+    """The one database factory every benchmark uses: same workload,
+    any tier, constructed only through ``repro.db.create``.  Unlabeled
+    single-store builds share one Vamana graph per workload (the
+    paper's unified-codebase control)."""
+    spec = dataclasses.replace(
+        SPEC, tier=tier, mode=mode, path=store_path, n_bits=n_bits,
+        bucket_capacity=bucket_capacity, seed=seed,
+        cache_frames=cache_frames, n_shards=n_shards,
+        spare_capacity=spare_capacity, filters=wl.labels is not None,
+        warm_batch_shapes=warm_batch_shapes)
     if wl.labels is not None:
-        return eng.build(wl.corpus, labels=wl.labels,
-                         n_labels=int(wl.labels.max()) + 1)
-    return eng.build(wl.corpus, prebuilt=shared_graph(wl))
+        return catapultdb.create(spec, wl.corpus, labels=wl.labels)
+    prebuilt = shared_graph(wl) if tier != "sharded" else None
+    return catapultdb.create(spec, wl.corpus, prebuilt=prebuilt)
 
 
-def stream(engine: VectorSearchEngine, wl: Workload, *, k: int,
+def stream(db: catapultdb.Database, wl: Workload, *, k: int,
            batch: int = 256, name: str = "", warm_frac: float = 0.0
            ) -> StreamResult:
     """Replay the workload's query stream in order; aggregate stats."""
@@ -82,11 +90,11 @@ def stream(engine: VectorSearchEngine, wl: Workload, *, k: int,
     n = (q.shape[0] // batch) * batch
     all_ids, hops, nds, usage = [], [], [], []
     # one warm call so jit compile time never pollutes QPS
-    engine.search(q[:batch], k=k, beam_width=beam,
-                  filter_labels=fl[:batch] if fl is not None else None)
+    db.search(q[:batch], k=k, beam_width=beam,
+              filter_labels=fl[:batch] if fl is not None else None)
     t0 = time.perf_counter()
     for lo in range(0, n, batch):
-        ids, _, st = engine.search(
+        ids, _, st = db.search(
             q[lo: lo + batch], k=k, beam_width=beam,
             filter_labels=fl[lo: lo + batch] if fl is not None else None)
         all_ids.append(ids)

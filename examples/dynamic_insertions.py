@@ -5,17 +5,17 @@ Fig. 2) while an approximate-cache baseline must serve stale results.
 """
 import numpy as np
 
-from repro.core import VamanaParams, VectorSearchEngine, brute_force_knn, \
-    recall_at_k
+from repro import db as catapultdb
+from repro.core import brute_force_knn, recall_at_k
 from repro.data.workloads import make_medrag_zipf
 
 wl = make_medrag_zipf(n=4_000, n_queries=512, d=32)
-vp = VamanaParams(max_degree=20, build_beam=40)
-eng = VectorSearchEngine(mode="catapult", vamana=vp,
-                         capacity=8_000).build(wl.corpus)
+db = catapultdb.create(
+    catapultdb.IndexSpec(mode="catapult", degree=20, build_beam=40,
+                         spare_capacity=4_000), wl.corpus)
 
 q = wl.queries[:256]
-ids, _, st = eng.search(q, k=5, beam_width=8)
+ids, _, st = db.search(q, k=5, beam_width=8)
 truth = brute_force_knn(wl.corpus, q, 5)
 print(f"before insert: recall={recall_at_k(ids, truth):.3f}")
 
@@ -23,12 +23,12 @@ print(f"before insert: recall={recall_at_k(ids, truth):.3f}")
 rng = np.random.default_rng(1)
 new = (q[rng.integers(0, 256, 400)]
        + 0.05 * rng.normal(size=(400, 32))).astype(np.float32)
-eng.insert(new)
+db.upsert(new)
 print("inserted 400 vectors (graph surgery + back-edges, no rebuild)")
 
 for rep in range(3):
-    ids, _, st = eng.search(q, k=5, beam_width=8)
-    truth = brute_force_knn(eng._vec_np[: eng.n_active], q, 5)
+    ids, _, st = db.search(q, k=5, beam_width=8)
+    truth = brute_force_knn(db.vectors, q, 5)
     frac_new = float((ids >= 4_000).mean())
     print(f"after insert, pass {rep}: recall={recall_at_k(ids, truth):.3f} "
           f"results-from-new-docs={frac_new:.2f} "

@@ -5,9 +5,9 @@ constrained traversal, with catapult destinations vetted per filter.
     PYTHONPATH=src python examples/filtered_search.py --backend disk
 
 ``--backend disk`` serves the same filtered workload from a CTPL v3
-block store: labels ride in the node blocks, per-label entry points in
-the persisted entry table, and the example reopens the file via
-``load()`` to show filtered state surviving a restart.
+block store — the only difference is ``tier='disk'`` in the spec; the
+example then reopens the file via ``catapultdb.open`` to show filtered
+state surviving a restart.
 """
 import argparse
 import os
@@ -15,8 +15,8 @@ import tempfile
 
 import numpy as np
 
-from repro.core import VamanaParams, VectorSearchEngine, brute_force_knn, \
-    recall_at_k
+from repro import db as catapultdb
+from repro.core import brute_force_knn, recall_at_k
 from repro.data.workloads import make_papers
 
 parser = argparse.ArgumentParser()
@@ -24,20 +24,15 @@ parser.add_argument("--backend", choices=("ram", "disk"), default="ram")
 args = parser.parse_args()
 
 wl = make_papers(n=4_000, n_labels=8, n_queries=512, d=32)
-vp = VamanaParams(max_degree=16, build_beam=32)
 tmp = tempfile.TemporaryDirectory() if args.backend == "disk" else None
-if args.backend == "disk":
-    from repro.store.io_engine import DiskVectorSearchEngine
-    eng = DiskVectorSearchEngine(
-        mode="catapult", vamana=vp,
-        store_path=os.path.join(tmp.name, "papers.ctpl"))
-else:
-    eng = VectorSearchEngine(mode="catapult", vamana=vp)
-eng.build(wl.corpus, labels=wl.labels, n_labels=8)
+spec = catapultdb.IndexSpec(
+    tier=args.backend, degree=16, build_beam=32, filters=True,
+    path=os.path.join(tmp.name, "papers.ctpl") if tmp else None)
+db = catapultdb.create(spec, wl.corpus, labels=wl.labels)
 
 q, fl = wl.queries[:256], wl.filter_labels[:256]
 for rep in range(2):
-    ids, _, st = eng.search(q, k=5, beam_width=8, filter_labels=fl)
+    ids, _, st = db.search(q, k=5, beam_width=8, filter_labels=fl)
 truth = brute_force_knn(wl.corpus, q, 5, labels=wl.labels, filter_labels=fl)
 valid = ids >= 0
 ok = (wl.labels[np.maximum(ids, 0)] == fl[:, None])[valid].mean()
@@ -48,18 +43,19 @@ print(f"[{args.backend}] filtered recall@5={recall_at_k(ids, truth):.3f}  "
 
 # same LSH region, different predicate -> catapults re-vetted per filter
 other = ((fl + 3) % 8).astype(np.int32)
-ids2, _, _ = eng.search(q, k=5, beam_width=8, filter_labels=other)
+ids2, _, _ = db.search(q, k=5, beam_width=8, filter_labels=other)
 ok2 = (wl.labels[np.maximum(ids2, 0)] == other[:, None])[ids2 >= 0].mean()
 print(f"swapped predicates: satisfied={ok2:.3f} (catapult destinations "
       f"that fail the filter fall back to per-label entry points, §3.4)")
 
 if args.backend == "disk":
     # CTPL v3: labels + per-label entry points persist — reopen and serve
-    eng.save()
-    path = eng.store_path
-    eng.close()
-    from repro.store.io_engine import DiskVectorSearchEngine
-    re = DiskVectorSearchEngine.load(path, mode="catapult", vamana=vp)
+    db.save()
+    path = db.spec.path
+    db.close()
+    re = catapultdb.open(path, spec=catapultdb.IndexSpec(degree=16,
+                                                         build_beam=32))
+    assert re.caps.filtered and re.caps.persistent
     ids3, _, _ = re.search(q, k=5, beam_width=8, filter_labels=fl)
     ok3 = (wl.labels[np.maximum(ids3, 0)] == fl[:, None])[ids3 >= 0].mean()
     print(f"reopened from disk: recall@5={recall_at_k(ids3, truth):.3f}  "

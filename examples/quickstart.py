@@ -1,34 +1,27 @@
-"""Quickstart: build a CatapultDB index, stream a biased workload, watch
-catapults cut traversal work vs. vanilla DiskANN.
+"""Quickstart: one CatapultDB front door — build, stream a biased
+workload, watch catapults cut traversal work vs. vanilla DiskANN.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import VamanaParams, VectorSearchEngine, brute_force_knn, \
-    recall_at_k
+from repro import db as catapultdb
+from repro.core import brute_force_knn, recall_at_k
 from repro.data.workloads import make_medrag_zipf
 
 wl = make_medrag_zipf(n=6_000, n_queries=1_024, d=48)
-vp = VamanaParams(max_degree=20, build_beam=40)
-
-print("building Vamana graph + engines ...")
-diskann = VectorSearchEngine(mode="diskann", vamana=vp).build(wl.corpus)
-catapult = VectorSearchEngine(mode="catapult", vamana=vp).build(wl.corpus)
-
 truth = brute_force_knn(wl.corpus, wl.queries, 5)
-for name, eng in [("diskann ", diskann), ("catapult", catapult)]:
-    ids_all = []
-    hops = ndists = used = 0.0
+for mode in ("diskann", "catapult"):
+    db = catapultdb.create(catapultdb.IndexSpec(mode=mode, degree=20,
+                                                build_beam=40), wl.corpus)
+    ids, hops, used = [], 0.0, 0.0
     for lo in range(0, 1024, 256):          # replay the stream in order
-        ids, _, st = eng.search(wl.queries[lo: lo + 256], k=5, beam_width=8)
-        ids_all.append(ids)
-        hops += st.hops.mean() / 4
-        ndists += st.ndists.mean() / 4
-        used += st.used.mean() / 4
-    rec = recall_at_k(np.concatenate(ids_all), truth)
-    print(f"{name}  recall@5={rec:.3f}  nodes-visited={hops:5.1f}  "
-          f"dists-computed={ndists:6.1f}  catapult-usage={used:.2f}")
+        r = db.search(wl.queries[lo: lo + 256], k=5, beam_width=8)
+        ids.append(r.ids)
+        hops += r.stats.hops.mean() / 4
+        used += r.stats.used.mean() / 4
+    print(f"{mode:8s}  recall@5={recall_at_k(np.concatenate(ids), truth):.3f}"
+          f"  nodes-visited={hops:5.1f}  catapult-usage={used:.2f}")
 
 print("\ncatapults: same graph, same search algorithm — only the starting "
       "points changed (paper §3.1).")

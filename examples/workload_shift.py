@@ -4,38 +4,36 @@ and the win-rate + disk I/O recover — while a frozen bucket table
 would keep landing beams in the old hot set (paper §1, Fig. 7).
 
 Replays a medrag_zipf stream whose popularity map swaps halfway
-(``make_shifted_zipf``) through a ``VectorSearchFrontend`` over the
-disk tier, printing windowed win-rate and block reads per query as
-adaptation kicks in.
+(``make_shifted_zipf``) through the facade's one-line serving stack —
+``db.serve()`` wires the micro-batching frontend AND the drift-aware
+maintainer from the spec's adapt policy — printing windowed win-rate
+and block reads per query as adaptation kicks in.
 
     PYTHONPATH=src python examples/workload_shift.py
 """
 import os
 import tempfile
 
-import numpy as np
-
-from repro.adapt import CatapultMaintainer, PolicyConfig
-from repro.core import VamanaParams
+from repro import db as catapultdb
+from repro.adapt import PolicyConfig
 from repro.data.workloads import make_shifted_zipf
-from repro.serving.engine import VectorSearchFrontend
-from repro.store.io_engine import DiskVectorSearchEngine
 
 BATCH = 64
 wl = make_shifted_zipf(n=2_000, n_queries=1_536, kind="sudden", seed=1)
 shift = wl.meta["shift_point"]
-vp = VamanaParams(max_degree=16, build_beam=32)
 
 with tempfile.TemporaryDirectory() as td:
-    eng = DiskVectorSearchEngine(
-        mode="catapult", vamana=vp, seed=0, cache_frames=128,
-        store_path=os.path.join(td, "shift.ctpl")).build(wl.corpus)
-    policy = PolicyConfig(observe_every=1, baseline_every=8, min_batches=4)
-    maintainer = CatapultMaintainer(eng, policy, tick_every=2)
-    # the disk/sharded tiers can also run maintenance off-thread:
-    #   maintainer.start(interval=0.5)   ... maintainer.stop()
-    fe = VectorSearchFrontend(eng, k=8, max_batch=BATCH,
-                              maintainer=maintainer)
+    db = catapultdb.create(
+        catapultdb.IndexSpec(
+            tier="disk", path=os.path.join(td, "shift.ctpl"),
+            degree=16, build_beam=32, seed=0, cache_frames=128, k=8,
+            adapt=PolicyConfig(observe_every=1, baseline_every=8,
+                               min_batches=4),
+            adapt_tick_every=2),
+        wl.corpus)
+    # serving + adaptation in one line: frontend + attached maintainer
+    fe = db.serve(max_batch=BATCH)
+    maintainer = fe.maintainer
 
     print(f"{'queries':>8} {'phase':>6} {'win':>6} {'reads/q':>8} "
           f"{'drift':>6} {'flushes':>8}")
@@ -46,7 +44,7 @@ with tempfile.TemporaryDirectory() as td:
         fe.flush()                       # ONE batched backend search
         if (lo // BATCH) % 4 == 3:
             s = maintainer.snapshot()
-            cs = eng.cache.stats
+            cs = db.cache_stats
             phase = "pre" if lo + BATCH <= shift else "post"
             print(f"{lo + BATCH:>8} {phase:>6} {s['win_ewma']:>6.3f} "
                   f"{cs.block_reads / (lo + BATCH):>8.2f} "
@@ -60,4 +58,4 @@ with tempfile.TemporaryDirectory() as td:
           f"hop saving {s['hop_saving']:.1%} (hops {s['hops_ewma']:.1f} "
           f"vs diskann shadow {s['base_hops_ewma']:.1f}) — on a corpus "
           f"this small the gate may rightly judge shortcuts not worth it")
-    eng.close()
+    db.close()

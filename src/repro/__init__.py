@@ -3,5 +3,58 @@
 Reproduction of "Catapults to the Rescue: Accelerating Vector Search by
 Exploiting Query Locality" (EPFL, CS.DB 2026) as a production-grade
 multi-pod JAX framework.  See README.md / DESIGN.md / EXPERIMENTS.md.
+
+Public API — the ``repro.db`` facade (docs/API.md):
+
+    from repro import db as catapultdb
+    d = catapultdb.create(catapultdb.IndexSpec(...), vectors)
+    d = catapultdb.open("index.ctpl")
+
+The facade types re-export here for convenience; the legacy tier
+constructors (``VectorSearchEngine``, ``DiskVectorSearchEngine``,
+``ShardedDiskVectorSearchEngine``) and the serving/adaptation classes
+stay importable as deprecation shims — new code should construct
+through ``repro.db`` only.  Everything resolves lazily (PEP 562) so
+``import repro`` stays free of the jax-heavy engine stack.
 """
 __version__ = "1.0.0"
+
+# name -> defining module; the documented public symbol set
+# (tests/test_api_surface.py pins this mapping)
+_EXPORTS = {
+    # the facade (preferred)
+    "db": "repro.db",
+    "Database": "repro.db",
+    "IndexSpec": "repro.db",
+    "SearchRequest": "repro.db",
+    "SearchResult": "repro.db",
+    "Caps": "repro.db",
+    "CapabilityError": "repro.db",
+    "create": "repro.db",
+    "open": "repro.db",
+    "sniff": "repro.db",
+    # deprecation shims: the internal layer behind the facade
+    "VectorSearchEngine": "repro.core.engine",
+    "DiskVectorSearchEngine": "repro.store.io_engine",
+    "ShardedDiskVectorSearchEngine": "repro.store.sharded_store",
+    "VectorSearchFrontend": "repro.serving.engine",
+    "CatapultMaintainer": "repro.adapt.maintainer",
+    "PolicyConfig": "repro.adapt.policy",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    import importlib
+    target = _EXPORTS.get(name)
+    if target is None:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}")
+    module = importlib.import_module(target)
+    value = module if name == "db" else getattr(module, name)
+    globals()[name] = value          # cache: resolve once per process
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

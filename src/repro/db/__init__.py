@@ -1,0 +1,38 @@
+"""repro.db — CatapultDB's one front door.
+
+The paper sells catapults as a *transparent* layer: the search
+algorithm, the feature set (filtered search, dynamic insertion, disk
+residence) and the serving story are unchanged whichever tier holds the
+index.  This package is that transparency as an API: one declarative
+``IndexSpec`` selects RAM / single-disk / sharded-disk, ``create`` and
+``open`` are the only constructors, and the returned ``Database``
+exposes the whole feature matrix behind a ``caps`` record.
+
+    from repro import db as catapultdb
+
+    d = catapultdb.create(catapultdb.IndexSpec(tier="disk",
+                                               path="idx.ctpl"), vectors)
+    ids, dists, stats = d.search(queries, k=10)
+    frontend = d.serve(max_batch=64)          # micro-batching + maintainer
+    d.save(); d.close()
+    d = catapultdb.open("idx.ctpl")           # sniffs tier + version
+
+The internal engines (``repro.core.engine``, ``repro.store``) remain
+importable for tests and extensions, but every example, benchmark and
+cross-tier harness in this repo constructs indices through here.
+
+The public surface of this package is snapshotted in
+``docs/api_surface.txt`` and CI-diffed by ``tests/test_api_surface.py``;
+regenerate after an intentional change with
+
+    PYTHONPATH=src python -m repro.db.surface > docs/api_surface.txt
+"""
+from repro.db.database import Database
+from repro.db.factory import create, open, sniff
+from repro.db.spec import (CapabilityError, Caps, IndexSpec, SearchRequest,
+                           SearchResult)
+
+__all__ = [
+    "CapabilityError", "Caps", "Database", "IndexSpec", "SearchRequest",
+    "SearchResult", "create", "open", "sniff",
+]

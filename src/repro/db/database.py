@@ -1,0 +1,249 @@
+"""The ``Database`` facade — one object, the whole feature set, any tier.
+
+A ``Database`` wraps exactly one internal engine (RAM
+``VectorSearchEngine``, single-store ``DiskVectorSearchEngine``, or
+scatter-gather ``ShardedDiskVectorSearchEngine``) behind the paper's
+transparency claim: the caller never learns which tier answered.  The
+methods ARE the feature matrix — ``search`` (filtered, per-request
+k/beam, publish opt-out), ``upsert``/``delete``/``consolidate``
+(mutable tiers), ``save`` (persistent tiers), ``serve`` (micro-batching
+frontend with an optionally attached drift maintainer) — and ``caps``
+says which of them this tier backs, so degradation is a probed record,
+not a caught ``AttributeError``.
+
+Dispatch detail the facade owns: every search passes an EXPLICIT
+``publish_mask`` array (all-True for publishing requests) instead of
+``None``.  ``publish_mask`` is part of the jit trace signature, so
+keeping it always-an-array gives warmup, serving-frontend, and direct
+facade calls ONE compiled signature per (batch, k, beam) — which is
+what makes ``warm()``'s pre-compilation actually cover the hot path.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.db.spec import (CapabilityError, Caps, IndexSpec, SearchRequest,
+                           SearchResult)
+
+
+class Database:
+    """Tier-agnostic CatapultDB handle; construct via ``repro.db.create``
+    or ``repro.db.open``, never directly."""
+
+    def __init__(self, backend, spec: IndexSpec, caps: Caps):
+        self.backend = backend       # the internal engine (stable API)
+        self.spec = spec
+        self.caps = caps
+        self.maintainer = None       # set by serve()/attach_maintainer()
+        self.last_warm_ms: Optional[float] = None
+
+    # ---------------------------------------------------------------- search
+    def search(self, request, *, k: Optional[int] = None,
+               beam_width: Optional[int] = None,
+               filter_labels: Optional[np.ndarray] = None,
+               publish: Optional[bool] = None,
+               max_iters: Optional[int] = None) -> SearchResult:
+        """Serve one batched request.
+
+        ``request`` is a ``SearchRequest`` — or a raw (B, d) query array
+        with the request fields as keyword arguments (the convenience
+        spelling every bench and example uses).  The two spellings are
+        exclusive: keywords alongside a ``SearchRequest`` raise rather
+        than being silently outvoted by the request's fields.
+        """
+        if isinstance(request, SearchRequest):
+            extras = dict(k=k, beam_width=beam_width,
+                          filter_labels=filter_labels, publish=publish,
+                          max_iters=max_iters)
+            passed = [name for name, v in extras.items() if v is not None]
+            if passed:
+                raise TypeError(
+                    f"got a SearchRequest AND keyword(s) {passed}; set "
+                    f"the fields on the request (dataclasses.replace) "
+                    f"instead")
+        else:
+            request = SearchRequest(queries=request, k=k,
+                                    beam_width=beam_width,
+                                    filter_labels=filter_labels,
+                                    publish=publish is not False,
+                                    max_iters=max_iters)
+        if request.filter_labels is not None and not self.caps.filtered:
+            raise CapabilityError(
+                f"filter_labels on an unfiltered index (tier="
+                f"{self.caps.tier}); build with IndexSpec(filters=True) "
+                f"and labels")
+        q = np.ascontiguousarray(request.queries, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        mask = np.full(q.shape[0], bool(request.publish), bool)
+        ids, dists, stats = self.backend.search(
+            q, k=request.k or self.spec.k,
+            beam_width=request.beam_width or self.spec.beam_width,
+            filter_labels=request.filter_labels,
+            max_iters=request.max_iters, publish_mask=mask)
+        return SearchResult(ids=np.asarray(ids), dists=np.asarray(dists),
+                            stats=stats)
+
+    # ---------------------------------------------------------------- mutate
+    def upsert(self, vectors: np.ndarray,
+               labels: Optional[np.ndarray] = None) -> np.ndarray:
+        """Insert a batch; returns the assigned ids (stable forever).
+
+        Tier-uniform: the RAM engine grows into its preallocated
+        capacity, the disk store writes blocks through the cache, the
+        sharded tier routes to the least-loaded shard."""
+        self._need("mutable", "upsert")
+        if labels is not None and not self.caps.filtered:
+            raise CapabilityError("labels on an unfiltered index")
+        if labels is None and self.caps.filtered:
+            # the engine would silently tag the rows label 0, polluting
+            # that category's filtered results — same strictness as
+            # create(filters=True)
+            raise ValueError("a filtered index needs labels on upsert()")
+        return self.backend.insert_batch(
+            np.ascontiguousarray(vectors, np.float32), labels)
+
+    def delete(self, ids: np.ndarray) -> None:
+        """Tombstone ``ids``; catapult buckets flushed of the dead
+        destinations, medoid/label entries re-elected as needed."""
+        self._need("mutable", "delete")
+        self.backend.delete(ids)
+
+    def consolidate(self) -> int:
+        """FreshVamana compaction pass; returns repaired row count."""
+        self._need("mutable", "consolidate")
+        return self.backend.consolidate()
+
+    # ---------------------------------------------------------------- persist
+    def save(self) -> None:
+        """Flush every persisted structure (blocks, tombstones, label
+        entries, catapult buckets + adapt telemetry where live) so
+        ``repro.db.open(spec.path)`` resumes this exact state."""
+        self._need("persistent", "save")
+        self.backend.save()
+
+    def close(self) -> None:
+        close = getattr(self.backend, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self) -> "Database":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # ---------------------------------------------------------------- serve
+    def serve(self, *, max_batch: int = 64, k: Optional[int] = None,
+              beam_width: Optional[int] = None, maintain=None):
+        """One-line serving: a micro-batching ``VectorSearchFrontend``
+        over this database, with the drift-aware ``CatapultMaintainer``
+        attached when the spec carries an adapt policy.
+
+        ``maintain``: None = follow ``spec.adapt``; False = never
+        attach; a ``PolicyConfig`` = attach with that policy.
+        """
+        from repro.serving.engine import VectorSearchFrontend
+        maintainer = None
+        policy = self.spec.adapt if maintain is None else maintain
+        if policy:
+            maintainer = self.attach_maintainer(
+                policy if policy is not True else None)
+        return VectorSearchFrontend(
+            self.backend, k=k or self.spec.k, max_batch=max_batch,
+            beam_width=beam_width or self.spec.beam_width,
+            maintainer=maintainer)
+
+    def attach_maintainer(self, policy=None, tick_every: Optional[int] = None):
+        """Create (and remember) a ``CatapultMaintainer`` over the
+        backend — resumes any adapt telemetry a reopened index carried."""
+        from repro.adapt import CatapultMaintainer
+        if self.backend.mode != "catapult":
+            raise CapabilityError(
+                f"maintainer needs mode='catapult', this database is "
+                f"{self.backend.mode!r}")
+        self.maintainer = CatapultMaintainer(
+            self.backend, policy or self.spec.adapt,
+            tick_every=tick_every or self.spec.adapt_tick_every)
+        return self.maintainer
+
+    # ---------------------------------------------------------------- warmup
+    def warm(self, batch_shapes=None, *, k: Optional[int] = None,
+             beam_width: Optional[int] = None) -> float:
+        """Pre-compile the jit signatures for the declared batch shapes.
+
+        Runs one throwaway search per batch size with ``publish=False``
+        (bucket state untouched) and then cold-starts the disk tiers'
+        I/O counters, so the warmup neither skews the workload-adapted
+        state nor pollutes I/O accounting.  Returns elapsed ms (the
+        compile cost moved out of the first real query) and records it
+        as ``last_warm_ms``.
+        """
+        shapes = tuple(batch_shapes if batch_shapes is not None
+                       else self.spec.warm_batch_shapes)
+        dim = self.dim
+        t0 = time.perf_counter()
+        for b in shapes:
+            q = np.zeros((int(b), dim), np.float32)
+            self.search(q, k=k, beam_width=beam_width, publish=False)
+        ms = (time.perf_counter() - t0) * 1e3
+        if shapes:
+            self.reset_io()
+        self.last_warm_ms = ms
+        return ms
+
+    # ---------------------------------------------------------------- state
+    @property
+    def n_active(self) -> int:
+        return self.backend.n_active
+
+    @property
+    def dim(self) -> int:
+        if hasattr(self.backend, "dim") and self.backend.dim:
+            return int(self.backend.dim)          # sharded facade
+        return int(self.backend._vec_np.shape[1])
+
+    @property
+    def n_labels(self) -> int:
+        return int(getattr(self.backend, "n_labels", 0))
+
+    @property
+    def vectors(self) -> np.ndarray:
+        """Host view of the active rows — ground-truth material for
+        benches/tests (single-store tiers only)."""
+        if self.caps.sharded:
+            raise CapabilityError("per-row host views are per-shard on "
+                                  "the sharded tier")
+        return self.backend._vec_np[: self.backend.n_active]
+
+    @property
+    def tombstones(self) -> np.ndarray:
+        """Tombstone flags for the active rows (single-store tiers)."""
+        if self.caps.sharded:
+            raise CapabilityError("per-row host views are per-shard on "
+                                  "the sharded tier")
+        return self.backend._tomb_np[: self.backend.n_active]
+
+    # ---------------------------------------------------------------- I/O
+    def reset_io(self) -> None:
+        """Cold-start I/O counters + cache (no-op on the RAM tier)."""
+        reset = getattr(self.backend, "reset_io", None)
+        if reset is not None:
+            reset()
+
+    @property
+    def cache_stats(self):
+        """Aggregate ``CacheStats`` (None on the RAM tier)."""
+        if hasattr(self.backend, "cache_stats"):
+            return self.backend.cache_stats       # sharded aggregate
+        cache = getattr(self.backend, "cache", None)
+        return cache.stats if cache is not None else None
+
+    def _need(self, cap: str, op: str) -> None:
+        if not getattr(self.caps, cap):
+            raise CapabilityError(
+                f"{op}() needs the {cap!r} capability, which the "
+                f"{self.caps.tier!r} tier of this database lacks")

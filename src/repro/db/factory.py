@@ -1,0 +1,157 @@
+"""``create``/``open`` — the two ways a CatapultDB database comes to be.
+
+``create(spec, vectors[, labels])`` builds a fresh index on whichever
+tier the spec names; ``open(path)`` reopens a persisted one, sniffing
+what is on disk — a single CTPL block file (any persisted version,
+v1/v2/v3) opens as the single-store disk tier, a sharded manifest
+directory opens as the scatter-gather tier — so callers never encode
+tier knowledge in their own code.  Both return a ``Database`` and both
+run the spec's jit pre-warm before handing it back: by the time the
+caller holds the handle, the declared batch shapes are compiled.
+"""
+from __future__ import annotations
+
+import builtins
+import dataclasses
+import json
+import os
+import struct
+from typing import Optional
+
+import numpy as np
+
+from repro.db.database import Database
+from repro.db.spec import Caps, IndexSpec
+
+
+def sniff(path: str) -> tuple[str, int]:
+    """Identify what a path holds: ``('sharded', manifest_version)`` for
+    a manifest directory, ``('disk', ctpl_version)`` for a CTPL block
+    file.  Raises ``FileNotFoundError``/``ValueError`` otherwise."""
+    if os.path.isdir(path):
+        # the jax-heavy engine module only loads on the directory branch
+        # — exactly the case where open() imports it anyway
+        from repro.store.sharded_store import (MANIFEST_FORMAT,
+                                               MANIFEST_NAME)
+        mpath = os.path.join(path, MANIFEST_NAME)
+        if not os.path.exists(mpath):
+            raise ValueError(f"directory without a {MANIFEST_NAME}: "
+                             f"{path!r}")
+        with builtins.open(mpath) as f:     # this module defines open()
+            manifest = json.load(f)
+        if manifest.get("format") != MANIFEST_FORMAT:
+            raise ValueError(f"unrecognized manifest format "
+                             f"{manifest.get('format')!r} in {path!r}")
+        return "sharded", int(manifest.get("version", 0))
+    from repro.store.layout import MAGIC
+    with builtins.open(path, "rb") as f:
+        raw = f.read(8)
+    if len(raw) < 8:
+        raise ValueError(f"not a CTPL store (too short): {path!r}")
+    magic, version = struct.unpack("<II", raw)
+    if magic != MAGIC:
+        raise ValueError(f"not a CTPL store (bad magic {magic:#x}): "
+                         f"{path!r}")
+    return "disk", version
+
+
+def _caps(tier: str, filtered: bool) -> Caps:
+    return Caps(tier=tier, mutable=True, filtered=bool(filtered),
+                persistent=tier != "ram", sharded=tier == "sharded")
+
+
+def create(spec: IndexSpec, vectors: np.ndarray,
+           labels: Optional[np.ndarray] = None,
+           prebuilt=None) -> Database:
+    """Build a fresh database per ``spec`` from ``vectors`` (+ per-row
+    ``labels`` when ``spec.filters``); pre-warms and returns it.
+
+    ``prebuilt``: optional (adjacency, medoid[, label_entries]) from a
+    previous build over the SAME vectors — the benches' unified-codebase
+    control (systems under comparison differ only in entry-point
+    selection, never in graph).  Single-store tiers only.
+    """
+    vectors = np.ascontiguousarray(vectors, np.float32)
+    n, d = vectors.shape
+    if spec.dim is not None and spec.dim != d:
+        raise ValueError(f"spec.dim={spec.dim} but vectors have dim {d}")
+    if spec.filters != (labels is not None):
+        raise ValueError(
+            "IndexSpec(filters=True) needs per-row labels at create() "
+            "(and labels need filters=True)")
+    n_labels = int(labels.max()) + 1 if labels is not None else None
+    if prebuilt is not None and spec.tier == "sharded":
+        raise ValueError("prebuilt graphs are single-store only — each "
+                         "shard builds over its own row slice")
+
+    if spec.tier == "ram":
+        from repro.core.engine import VectorSearchEngine
+        eng = VectorSearchEngine(
+            mode=spec.mode, vamana=spec.vamana(), n_bits=spec.n_bits,
+            bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
+            seed=spec.seed, capacity=n + spec.spare_capacity)
+        eng.build(vectors, labels=labels, n_labels=n_labels,
+                  prebuilt=prebuilt)
+    elif spec.tier == "disk":
+        from repro.store.io_engine import DiskVectorSearchEngine
+        eng = DiskVectorSearchEngine(
+            mode=spec.mode, vamana=spec.vamana(), n_bits=spec.n_bits,
+            bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
+            seed=spec.seed, capacity=n + spec.spare_capacity,
+            cache_frames=spec.cache_frames, store_path=spec.path)
+        eng.build(vectors, labels=labels, n_labels=n_labels,
+                  prebuilt=prebuilt)
+    else:
+        from repro.store.sharded_store import ShardedDiskVectorSearchEngine
+        eng = ShardedDiskVectorSearchEngine(
+            store_dir=spec.path, n_shards=spec.n_shards, mode=spec.mode,
+            vamana=spec.vamana(), n_bits=spec.n_bits,
+            bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
+            seed=spec.seed, cache_frames=spec.cache_frames)
+        eng.build(vectors, labels=labels, n_labels=n_labels,
+                  spare_capacity=spec.spare_capacity)
+
+    db = Database(eng, spec, _caps(spec.tier, labels is not None))
+    db.warm()
+    return db
+
+
+def open(path: str, *, mode: Optional[str] = None,
+         spec: Optional[IndexSpec] = None) -> Database:
+    """Reopen whatever is persisted at ``path`` (see ``sniff``).
+
+    ``mode`` overrides the acceleration mode (sharded manifests record
+    their own; single files default to 'catapult').  ``spec`` supplies
+    the runtime-only knobs a reopen cares about — graph params for
+    future upserts, cache size, serving defaults, adapt policy, warm
+    shapes — its tier/path fields are ignored in favour of what is on
+    disk.  An adapt sidecar (``<store>.adapt.npz`` / per-shard
+    ``.buckets.npz`` + manifest gate) resumes through this path
+    untouched: the reopened database picks up telemetry, buckets, and
+    the utility-gate verdict exactly where ``save()`` left them.
+    """
+    tier, _version = sniff(path)
+    runtime = spec or IndexSpec()
+    kwargs = dict(vamana=runtime.vamana(), cache_frames=runtime.cache_frames)
+    if tier == "sharded":
+        from repro.store.sharded_store import ShardedDiskVectorSearchEngine
+        eng = ShardedDiskVectorSearchEngine.load(path, mode=mode, **kwargs)
+    else:
+        from repro.store.io_engine import DiskVectorSearchEngine
+        eng = DiskVectorSearchEngine.load(
+            path, mode=mode or "catapult", n_bits=runtime.n_bits,
+            bucket_capacity=runtime.bucket_capacity, seed=runtime.seed,
+            **kwargs)
+    # reflect what the engine ACTUALLY restored (a sharded manifest or
+    # an adapt sidecar may have overridden the runtime knobs) — db.spec
+    # is construction vocabulary, so it must describe this index, not
+    # the caller's defaults
+    opened = dataclasses.replace(
+        runtime, tier=tier, mode=eng.mode, path=path,
+        pq=getattr(eng, "pq_subspaces", runtime.pq),
+        filters=bool(eng.filtered), n_bits=eng.n_bits,
+        bucket_capacity=eng.bucket_capacity, seed=eng.seed,
+        n_shards=getattr(eng, "n_shards", runtime.n_shards))
+    db = Database(eng, opened, _caps(tier, eng.filtered))
+    db.warm()
+    return db

@@ -1,0 +1,155 @@
+"""Declarative index specification + request/response types for CatapultDB.
+
+``IndexSpec`` is the ONE construction vocabulary for every tier: the
+same spec fields select a RAM engine, a single CTPL block store, or a
+sharded manifest directory (``tier``), and carry the whole feature
+surface the paper's Table 1 promises — acceleration mode, PQ traversal
+compression, filtered search, mutable spare capacity, and the adapt
+layer's maintenance policy.  ``repro.db.create``/``repro.db.open``
+consume it; nothing else in the public API takes tier-specific knobs.
+
+``SearchRequest``/``SearchResult`` are the typed per-request surface:
+``k``/``beam_width``/``filter_labels``/``publish`` ride on the request,
+never on the constructor, so one ``Database`` serves mixed traffic.
+``SearchResult`` is a NamedTuple ``(ids, dists, stats)`` — it unpacks
+exactly like the internal engines' 3-tuples, so facade call sites and
+engine call sites read identically.
+
+``Caps`` is the capability record backing graceful degradation: a
+caller probes ``db.caps.mutable`` (etc.) instead of type-sniffing the
+backend, and unsupported operations raise ``CapabilityError`` with the
+tier named, never an ``AttributeError`` from deep inside a tier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.adapt.policy import PolicyConfig
+from repro.core.engine import SearchStats
+from repro.core.vamana import VamanaParams
+
+TIERS = ("ram", "disk", "sharded")
+MODES = ("catapult", "diskann", "lsh_apg")
+
+
+class CapabilityError(RuntimeError):
+    """Operation not supported by this tier (see ``Database.caps``)."""
+
+
+class Caps(NamedTuple):
+    """What this database can do — probe instead of type-sniffing."""
+    tier: str            # 'ram' | 'disk' | 'sharded'
+    mutable: bool        # upsert / delete / consolidate
+    filtered: bool       # built with labels: filtered search available
+    persistent: bool     # save() / reopen via repro.db.open()
+    sharded: bool        # scatter-gather over >1 shard
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """Everything needed to construct an index, tier included.
+
+    Graph/build geometry:
+      ``degree``/``build_beam``/``build_batch``/``alpha`` map onto
+      ``VamanaParams``; ``dim`` is validated against the corpus at
+      ``create()`` (None = infer).
+
+    Feature selection:
+      ``mode`` picks the acceleration layer ('catapult' is the paper's
+      contribution; 'lsh_apg' is RAM-only).  ``pq`` sets PQ subspaces
+      (None = full precision on RAM, auto-sized on the disk tiers).
+      ``filters=True`` requires labels at ``create()`` and enables
+      per-label entry points + predicate-constrained traversal.
+      ``spare_capacity`` preallocates extra rows so ``upsert`` has
+      somewhere to land.
+
+    Tier selection:
+      ``tier='ram'`` needs no path; 'disk' and 'sharded' require
+      ``path`` (a .ctpl file / a manifest directory).  ``n_shards``
+      only applies to the sharded tier.
+
+    Serving defaults + adaptation:
+      ``k``/``beam_width`` are the DEFAULTS a request can override
+      per-call.  ``adapt`` attaches the drift-aware maintenance policy
+      (``serve()`` then wires a ``CatapultMaintainer`` automatically).
+      ``warm_batch_shapes`` are the batch sizes whose jit signatures
+      ``create()``/``open()`` pre-compile, so the first real query pays
+      dispatch cost, not compile cost.
+    """
+    tier: str = "ram"
+    mode: str = "catapult"
+    path: Optional[str] = None
+    # graph/build geometry
+    dim: Optional[int] = None
+    degree: int = 32
+    build_beam: int = 64
+    build_batch: int = 512
+    alpha: float = 1.2
+    # features
+    pq: Optional[int] = None
+    filters: bool = False
+    spare_capacity: int = 0
+    # catapult layer
+    n_bits: int = 8
+    bucket_capacity: int = 40
+    seed: int = 0
+    # disk tiers
+    cache_frames: int = 2048
+    n_shards: int = 2
+    # serving defaults (overridable per SearchRequest)
+    k: int = 10
+    beam_width: Optional[int] = None
+    # workload adaptation (catapult mode only)
+    adapt: Optional[PolicyConfig] = None
+    adapt_tick_every: int = 32
+    # jit pre-warm at create()/open(); () disables
+    warm_batch_shapes: tuple = ()
+
+    def __post_init__(self) -> None:
+        if self.tier not in TIERS:
+            raise ValueError(f"tier must be one of {TIERS}, "
+                             f"got {self.tier!r}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if self.tier != "ram" and self.mode == "lsh_apg":
+            raise ValueError("lsh_apg traverses at full precision — "
+                             "RAM tier only")
+        if self.tier != "ram" and self.path is None:
+            raise ValueError(f"tier={self.tier!r} needs a path")
+        if self.n_shards < 1:
+            raise ValueError(f"need >= 1 shard, got {self.n_shards}")
+        if self.adapt is not None and self.mode != "catapult":
+            raise ValueError("adapt policy needs mode='catapult'")
+
+    def vamana(self) -> VamanaParams:
+        return VamanaParams(max_degree=self.degree,
+                            build_beam=self.build_beam,
+                            batch=self.build_batch, alpha=self.alpha,
+                            seed=self.seed)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One batched k-NN request; every field is per-request.
+
+    ``publish=False`` opts the whole batch out of the catapult bucket
+    publish (warmup traffic, replayed audits, shadow reads — anything
+    that must not steer the workload-adapted state).
+    """
+    queries: np.ndarray
+    k: Optional[int] = None              # None = the spec default
+    beam_width: Optional[int] = None     # None = the spec/tier default
+    filter_labels: Optional[np.ndarray] = None
+    publish: bool = True
+    max_iters: Optional[int] = None
+
+
+class SearchResult(NamedTuple):
+    """(ids, dists, stats) — unpacks like the internal engines' return."""
+    ids: np.ndarray              # (B, k) int32, -1 padded
+    dists: np.ndarray            # (B, k) float32
+    stats: SearchStats

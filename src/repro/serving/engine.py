@@ -46,6 +46,14 @@ class VectorSearchFrontend:
     returns the per-chunk SearchStats for I/O attribution, real lanes
     only).
 
+    ``k``/``beam_width`` are per-request: ``submit(q, k=...,
+    beam_width=...)`` overrides the construction-time defaults for that
+    ticket only.  ``flush`` groups pending tickets by their effective
+    (k, beam) pair — requests sharing a pair batch together, so the
+    backend's jit cache stays bounded by the number of distinct pairs
+    in flight, never by request interleaving order — and each ticket
+    gets back ids/dists shaped by ITS k.
+
     ``maintainer`` (a ``repro.adapt.CatapultMaintainer``) hooks the
     workload-adaptation loop into the serving path: every dispatched
     chunk is observed (real lanes only), and maintenance ticks ride
@@ -59,22 +67,29 @@ class VectorSearchFrontend:
         self.backend = backend
         self.k, self.max_batch, self.beam_width = k, max_batch, beam_width
         self.maintainer = maintainer
-        self._queue: list[tuple[int, np.ndarray]] = []
+        # ticket queue entries: (ticket, query, k, beam_width) with the
+        # per-request overrides already resolved against the defaults
+        self._queue: list[tuple[int, np.ndarray, int, Optional[int]]] = []
         self._next_ticket = 0
         self.batches_dispatched = 0
 
-    def submit(self, query: np.ndarray) -> int:
+    def submit(self, query: np.ndarray, k: Optional[int] = None,
+               beam_width: Optional[int] = None) -> int:
+        """Queue one query; ``k``/``beam_width`` override the frontend
+        defaults for this ticket only."""
         q = np.ascontiguousarray(query, np.float32).ravel()
         ticket = self._next_ticket
         self._next_ticket += 1
-        self._queue.append((ticket, q))
+        self._queue.append((ticket, q, k or self.k,
+                            beam_width or self.beam_width))
         return ticket
 
     @property
     def pending(self) -> int:
         return len(self._queue)
 
-    def _dispatch_chunk(self, qs: np.ndarray, k: int):
+    def _dispatch_chunk(self, qs: np.ndarray, k: int,
+                        beam_width: Optional[int] = None):
         """Pad to the fixed batch shape, search with padded lanes masked
         out of publishes, and return (ids, dists, stats) trimmed to the
         real lanes; feeds the maintainer when one is attached."""
@@ -85,7 +100,7 @@ class VectorSearchFrontend:
         mask = np.zeros(self.max_batch, bool)
         mask[:real] = True
         ids, dists, stats = self.backend.search(
-            qs, k=k, beam_width=self.beam_width, publish_mask=mask)
+            qs, k=k, beam_width=beam_width, publish_mask=mask)
         self.batches_dispatched += 1
         if self.maintainer is not None:
             # full padded shape + real_mask, NOT the trimmed views: the
@@ -104,21 +119,32 @@ class VectorSearchFrontend:
         return np.asarray(ids[:real]), np.asarray(dists[:real]), stats
 
     def flush(self) -> dict[int, tuple[np.ndarray, np.ndarray]]:
-        """Serve every queued request; returns {ticket: (ids, dists)}."""
+        """Serve every queued request; returns {ticket: (ids, dists)}.
+
+        Tickets group by their effective (k, beam) pair — submission
+        order is preserved within a pair, and each pair dispatches its
+        own fixed-shape chunks, so mixed-k traffic costs one jit
+        signature per distinct pair, not one per flush pattern."""
         out: dict[int, tuple[np.ndarray, np.ndarray]] = {}
-        while self._queue:
-            chunk = self._queue[: self.max_batch]
-            self._queue = self._queue[self.max_batch:]
-            qs = np.stack([q for _, q in chunk])
-            ids, dists, _ = self._dispatch_chunk(qs, self.k)
-            for row, (ticket, _) in enumerate(chunk):
-                out[ticket] = (ids[row], dists[row])
+        groups: dict[tuple, list] = {}
+        for entry in self._queue:
+            groups.setdefault((entry[2], entry[3]), []).append(entry)
+        self._queue = []
+        for (k, beam), entries in groups.items():
+            for lo in range(0, len(entries), self.max_batch):
+                chunk = entries[lo: lo + self.max_batch]
+                qs = np.stack([q for _, q, _, _ in chunk])
+                ids, dists, _ = self._dispatch_chunk(qs, k, beam)
+                for row, (ticket, _, _, _) in enumerate(chunk):
+                    out[ticket] = (ids[row], dists[row])
         return out
 
-    def search(self, queries: np.ndarray, k: Optional[int] = None):
+    def search(self, queries: np.ndarray, k: Optional[int] = None,
+               beam_width: Optional[int] = None):
         """Bulk path: chunk a (Q, d) batch through the backend and
         reassemble — same route the ticketed path takes, minus the queue."""
         k = k or self.k
+        beam_width = beam_width or self.beam_width
         queries = np.ascontiguousarray(queries, np.float32)
         if queries.shape[0] == 0:
             return (np.empty((0, k), np.int32),
@@ -126,7 +152,7 @@ class VectorSearchFrontend:
         all_ids, all_d, all_stats = [], [], []
         for lo in range(0, queries.shape[0], self.max_batch):
             ids, dists, stats = self._dispatch_chunk(
-                queries[lo: lo + self.max_batch], k)
+                queries[lo: lo + self.max_batch], k, beam_width)
             all_ids.append(ids)
             all_d.append(dists)
             all_stats.append(stats)

@@ -3,8 +3,9 @@
 This is the deployment context the paper targets (§1: "RAG pipelines for
 ML inference"): query embeddings hit the vector index; retrieved context
 is prepended to the prompt; the LM decodes.  The retrieval layer is a
-``VectorSearchEngine`` in any mode — swapping 'diskann' for 'catapult'
-accelerates the retrieval stage transparently, which is exactly the
+``repro.db`` database in any mode/tier — swapping 'diskann' for
+'catapult' (or RAM for disk) in the ``IndexSpec`` accelerates or
+re-tiers the retrieval stage transparently, which is exactly the
 paper's transparency claim exercised end-to-end.
 
 Embeddings come from the LM's own token-embedding table (mean-pooled) —
@@ -19,8 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import db as catapultdb
 from repro.configs.base import ArchConfig
-from repro.core.engine import VectorSearchEngine
 from repro.models import model as M
 
 
@@ -36,19 +37,23 @@ def embed_texts(cfg: ArchConfig, params, token_batches: np.ndarray
 class RagPipeline:
     cfg: ArchConfig
     params: object
-    engine: VectorSearchEngine
+    engine: catapultdb.Database      # the retrieval database (any tier)
     corpus_tokens: np.ndarray        # (N, S_doc) int32 document tokens
 
     @classmethod
-    def build(cls, cfg, params, corpus_tokens, *, mode="catapult",
-              vamana=None, seed=0):
-        from repro.core.vamana import VamanaParams
+    def build(cls, cfg, params, corpus_tokens, *, mode=None,
+              spec: Optional[catapultdb.IndexSpec] = None, seed=None):
+        """``mode``/``seed`` are the shorthand spelling, ``spec`` the
+        full one — exclusive, so a passed spec can never silently
+        outvote an explicitly requested mode."""
+        if spec is not None and (mode is not None or seed is not None):
+            raise TypeError("pass either spec= or mode=/seed=, not both")
         vecs = embed_texts(cfg, params, corpus_tokens)
-        eng = VectorSearchEngine(
-            mode=mode, vamana=vamana or VamanaParams(max_degree=16,
-                                                     build_beam=32),
-            seed=seed).build(vecs.astype(np.float32))
-        return cls(cfg=cfg, params=params, engine=eng,
+        spec = spec or catapultdb.IndexSpec(mode=mode or "catapult",
+                                            degree=16, build_beam=32,
+                                            seed=seed or 0)
+        db = catapultdb.create(spec, vecs.astype(np.float32))
+        return cls(cfg=cfg, params=params, engine=db,
                    corpus_tokens=corpus_tokens)
 
     def retrieve(self, query_tokens: np.ndarray, k: int = 2,

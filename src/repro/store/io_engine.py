@@ -128,6 +128,15 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         where it was.
         """
         bs = open_store(store_path)
+        try:
+            return cls._load_from(bs, store_path, mode, engine_kwargs)
+        except BaseException:
+            bs.close()     # don't leak the file handle + memmaps
+            raise
+
+    @classmethod
+    def _load_from(cls, bs, store_path: str, mode: str,
+                   engine_kwargs: dict) -> 'DiskVectorSearchEngine':
         entries = bs.read_label_entries()
         if bs.header.has_labels and entries is None:
             raise NotImplementedError(
@@ -159,17 +168,36 @@ class DiskVectorSearchEngine(VectorSearchEngine):
             tomb = np.zeros(bs.capacity, bool)
             tomb[bs.n_active:] = True
         eng._tomb_np = tomb.copy()
+        sidecar = _adapt_sidecar(store_path)
+        adapt_z = None
+        if mode == 'catapult' and os.path.exists(sidecar):
+            with np.load(sidecar) as z:
+                adapt_z = dict(z)
+            if "cat_n_bits" in adapt_z:
+                # the geometry the saved bucket table + telemetry were
+                # built under outranks the caller's (likely default)
+                # kwargs — restoring a 2^L-bucket table into an engine
+                # hashing 2^L' codes would corrupt lookups silently
+                eng.n_bits = int(adapt_z["cat_n_bits"])
+                eng.bucket_capacity = int(adapt_z["cat_bucket_capacity"])
+                eng.seed = int(adapt_z["cat_seed"])
         eng._init_aux(np.ascontiguousarray(bs.vectors[: bs.n_active],
                                            np.float32),
                       pq_codebook=codebook)
-        sidecar = _adapt_sidecar(store_path)
-        if mode == 'catapult' and os.path.exists(sidecar):
-            with np.load(sidecar) as z:
-                eng._cat = cat.CatapultState(lsh=eng._cat.lsh,
-                                             buckets=bk.from_arrays(z))
-                eng.adapt_state = adapt_stats.telemetry_from_arrays(z)
-                if "catapult_enabled" in z:
-                    eng.catapult_enabled = bool(z["catapult_enabled"])
+        if adapt_z is not None:
+            buckets = bk.from_arrays(adapt_z)
+            if buckets.ids.shape != eng._cat.buckets.ids.shape:
+                # a pre-geometry sidecar saved under non-default knobs:
+                # refuse rather than serve wrong catapult destinations
+                raise ValueError(
+                    f"adapt sidecar bucket table {buckets.ids.shape} does "
+                    f"not match this engine's catapult geometry "
+                    f"{eng._cat.buckets.ids.shape}; reopen with the "
+                    f"n_bits/bucket_capacity the index was built with")
+            eng._cat = cat.CatapultState(lsh=eng._cat.lsh, buckets=buckets)
+            eng.adapt_state = adapt_stats.telemetry_from_arrays(adapt_z)
+            if "catapult_enabled" in adapt_z:
+                eng.catapult_enabled = bool(adapt_z["catapult_enabled"])
         eng._sync_device()
         eng._open_cache()
         return eng
@@ -374,8 +402,17 @@ class DiskVectorSearchEngine(VectorSearchEngine):
             bs.write_label_entries(np.asarray(self._label_entry))
         if self.mode == 'catapult' and self.adapt_state is not None \
                 and include_adapt:
+            # catapult geometry rides in the sidecar: the bucket table
+            # and the telemetry histograms are only meaningful under the
+            # (n_bits, bucket_capacity, seed) that shaped them, and the
+            # single-file CTPL header has no field for any of the three
+            # — a zero-config load() reads them back from here instead
+            # of trusting its own defaults to match
             np.savez(_adapt_sidecar(self.store_path),
                      catapult_enabled=np.bool_(self.catapult_enabled),
+                     cat_n_bits=np.int64(self.n_bits),
+                     cat_bucket_capacity=np.int64(self.bucket_capacity),
+                     cat_seed=np.int64(self.seed),
                      **bk.to_arrays(self._cat.buckets),
                      **adapt_stats.telemetry_to_arrays(self.adapt_state))
         elif os.path.exists(_adapt_sidecar(self.store_path)):

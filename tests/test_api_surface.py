@@ -1,0 +1,83 @@
+"""API-surface snapshot + deprecation-shim contract.
+
+The ``repro.db`` facade is the API the next PRs build on; accidental
+signature or symbol drift should fail CI, not surface in a downstream
+breakage.  ``docs/api_surface.txt`` is the committed snapshot; after an
+INTENTIONAL change regenerate it with
+
+    PYTHONPATH=src python -m repro.db.surface > docs/api_surface.txt
+
+and commit it with the change.
+
+The second half pins the top-level ``repro`` namespace: the documented
+public symbol set exactly (facade + deprecation shims), with every shim
+forwarding by identity to its defining module.
+"""
+from __future__ import annotations
+
+import os
+
+import repro
+from repro.db import surface
+
+SNAPSHOT = os.path.join(os.path.dirname(__file__), os.pardir, "docs",
+                        "api_surface.txt")
+
+# the documented top-level symbol set — keep in sync with docs/API.md
+DOCUMENTED = {
+    # facade
+    "db", "Database", "IndexSpec", "SearchRequest", "SearchResult",
+    "Caps", "CapabilityError", "create", "open", "sniff",
+    # deprecation shims (the internal layer behind the facade)
+    "VectorSearchEngine", "DiskVectorSearchEngine",
+    "ShardedDiskVectorSearchEngine", "VectorSearchFrontend",
+    "CatapultMaintainer", "PolicyConfig",
+}
+
+
+def test_db_surface_matches_committed_snapshot():
+    with open(SNAPSHOT) as f:
+        committed = f.read()
+    fresh = surface.generate()
+    assert fresh == committed, (
+        "repro.db public surface drifted from docs/api_surface.txt.\n"
+        "If intentional, regenerate with\n"
+        "    PYTHONPATH=src python -m repro.db.surface "
+        "> docs/api_surface.txt\n"
+        "--- committed ---\n" + committed + "\n--- fresh ---\n" + fresh)
+
+
+def test_top_level_symbol_set_is_exactly_the_documented_one():
+    assert set(repro.__all__) == DOCUMENTED
+
+
+def test_shims_forward_by_identity():
+    from repro.adapt.maintainer import CatapultMaintainer
+    from repro.adapt.policy import PolicyConfig
+    from repro.core.engine import VectorSearchEngine
+    from repro.serving.engine import VectorSearchFrontend
+    from repro.store.io_engine import DiskVectorSearchEngine
+    from repro.store.sharded_store import ShardedDiskVectorSearchEngine
+
+    import repro.db
+    assert repro.db is repro.__getattr__("db")
+    assert repro.VectorSearchEngine is VectorSearchEngine
+    assert repro.DiskVectorSearchEngine is DiskVectorSearchEngine
+    assert (repro.ShardedDiskVectorSearchEngine
+            is ShardedDiskVectorSearchEngine)
+    assert repro.VectorSearchFrontend is VectorSearchFrontend
+    assert repro.CatapultMaintainer is CatapultMaintainer
+    assert repro.PolicyConfig is PolicyConfig
+    assert repro.create is repro.db.create
+    assert repro.open is repro.db.open
+    assert repro.Database is repro.db.Database
+    assert repro.IndexSpec is repro.db.IndexSpec
+
+
+def test_unknown_top_level_attribute_raises():
+    try:
+        repro.definitely_not_an_export
+    except AttributeError as e:
+        assert "definitely_not_an_export" in str(e)
+    else:
+        raise AssertionError("expected AttributeError")

@@ -1,0 +1,339 @@
+"""The ``repro.db`` facade: tier auto-detection, caps, warmup, serving.
+
+Covers the contracts the facade adds ON TOP of the engines it wraps
+(engine behaviour itself is pinned by test_store / test_sharded_store /
+test_disk_mutations):
+
+* ``open()`` sniffs what is on disk — CTPL v1/v2/v3 single files and a
+  sharded manifest directory each open to the right backend with the
+  right ``caps``,
+* an ``.adapt.npz`` sidecar resumes the adapt state (telemetry, bucket
+  table, utility-gate verdict) through the facade,
+* capability gating degrades gracefully (``CapabilityError``, never an
+  AttributeError from a tier's guts),
+* per-request ``k``/``beam_width`` on the serving frontend: mixed-k
+  flushes return correct per-ticket shapes and group into bounded
+  dispatch signatures,
+* ``publish=False`` requests leave the catapult bucket state untouched,
+* the spec's declared batch shapes pre-warm at create()/open().
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro import db as catapultdb
+from repro.store import layout
+from tests.conftest import make_clustered
+
+SPEC = catapultdb.IndexSpec(degree=16, build_beam=32, build_batch=512,
+                            seed=0, cache_frames=128)
+
+
+@pytest.fixture(scope="module")
+def data():
+    corpus, _, _ = make_clustered(600, 16, 8, seed=3)
+    return corpus
+
+
+def _stamp_version(path, version):
+    with open(path, "r+b") as f:
+        f.seek(4)
+        f.write(int(version).to_bytes(4, "little"))
+
+
+def _downgrade(path, version):
+    """Rewrite a fresh v3 file the way a v1/v2 writer would have left it:
+    strip the v3 tail sections + header fields, stamp the version down."""
+    bs = layout.open_store(path)
+    pq, _, _ = bs._read_tail_raw()
+    bs.header.has_tombs = False
+    bs.header.n_label_entries = 0
+    if version < 2:                 # v1 has no PQ section either
+        bs.header.pq_m = bs.header.pq_k = 0
+        pq = b""
+    bs._write_tail(pq, b"", b"")
+    bs.close()
+    _stamp_version(path, version)
+
+
+# --------------------------------------------------------------- open()
+def test_open_autodetects_ctpl_v3_file(data, tmp_path):
+    path = str(tmp_path / "v3.ctpl")
+    db = catapultdb.create(dataclasses.replace(SPEC, tier="disk", path=path),
+                           data)
+    db.save()
+    q = data[:16] + 0.01
+    ids_a, _, _ = db.search(q, k=4)
+    db.close()
+
+    assert catapultdb.sniff(path) == ("disk", 3)
+    re = catapultdb.open(path, spec=SPEC)
+    assert re.caps == catapultdb.Caps(tier="disk", mutable=True,
+                                      filtered=False, persistent=True,
+                                      sharded=False)
+    ids_b, _, _ = re.search(q, k=4)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    re.close()
+
+
+@pytest.mark.parametrize("version", [1, 2])
+def test_open_autodetects_downgraded_ctpl_files(data, tmp_path, version):
+    """v1 (no tail sections) and v2 (PQ only) files open through the
+    facade with full caps — the mutable tier degrades pre-v3 state to
+    'no tombstones / no label entries', not to a refusal."""
+    path = str(tmp_path / f"v{version}.ctpl")
+    db = catapultdb.create(dataclasses.replace(SPEC, tier="disk", path=path),
+                           data)
+    db.close()
+    _downgrade(path, version)
+
+    assert catapultdb.sniff(path) == ("disk", version)
+    re = catapultdb.open(path, spec=SPEC)
+    assert re.caps.persistent and re.caps.mutable and not re.caps.filtered
+    assert re.n_active == data.shape[0]
+    assert not np.asarray(re.tombstones).any()
+    ids, _, _ = re.search(data[:8] + 0.01, k=4)
+    assert (ids >= 0).any()
+    re.close()
+
+
+def test_open_autodetects_sharded_manifest_dir(data, tmp_path):
+    d = str(tmp_path / "s2")
+    db = catapultdb.create(
+        dataclasses.replace(SPEC, tier="sharded", n_shards=2, path=d), data)
+    db.save()
+    db.close()
+
+    assert catapultdb.sniff(d)[0] == "sharded"
+    re = catapultdb.open(d, spec=SPEC)
+    assert re.caps.sharded and re.caps.persistent
+    assert re.spec.n_shards == 2 and re.n_active == data.shape[0]
+    ids, _, _ = re.search(data[:8] + 0.01, k=4)
+    assert (ids >= 0).any()
+    re.close()
+
+
+def test_open_rejects_non_stores(tmp_path):
+    junk = tmp_path / "junk.bin"
+    junk.write_bytes(b"not a store, definitely")
+    with pytest.raises(ValueError):
+        catapultdb.sniff(str(junk))
+    (tmp_path / "emptydir").mkdir()
+    with pytest.raises(ValueError):
+        catapultdb.sniff(str(tmp_path / "emptydir"))
+    with pytest.raises(FileNotFoundError):
+        catapultdb.sniff(str(tmp_path / "nope.ctpl"))
+
+
+def test_open_resumes_adapt_sidecar_through_facade(data, tmp_path):
+    """A ``<store>.adapt.npz`` sidecar (written by save() with a live
+    maintainer) resumes through ``open()``: telemetry, bucket table and
+    the persisted utility-gate verdict all arrive on the reopened
+    backend, and a fresh maintainer picks the gate up where it left."""
+    from repro.adapt import PolicyConfig
+    path = str(tmp_path / "adapt.ctpl")
+    spec = dataclasses.replace(SPEC, tier="disk", path=path,
+                               adapt=PolicyConfig(min_batches=1))
+    db = catapultdb.create(spec, data)
+    m = db.attach_maintainer()
+    q = data[:32] + 0.01
+    for _ in range(3):
+        _, _, st = db.search(q, k=4)
+        m.observe(q, st)
+    db.backend.catapult_enabled = False          # a persisted gate verdict
+    db.save()
+    assert os.path.exists(path + ".adapt.npz")
+    n_batches = int(db.backend.adapt_state.n_batches)
+    assert n_batches > 0
+    db.close()
+
+    re = catapultdb.open(path, spec=SPEC)
+    assert re.backend.adapt_state is not None
+    assert int(re.backend.adapt_state.n_batches) == n_batches
+    assert re.backend.catapult_enabled is False
+    m2 = re.attach_maintainer(PolicyConfig(min_batches=1))
+    assert m2.catapult_enabled is False          # gate resumed, not reset
+    re.close()
+
+
+def test_open_restores_catapult_geometry_from_adapt_sidecar(data, tmp_path):
+    """A store built with NON-default catapult geometry (n_bits /
+    bucket_capacity / seed) must reopen zero-config: the sidecar carries
+    the geometry, so the restored bucket table and the rederived LSH
+    agree instead of silently corrupting lookups."""
+    from repro.adapt import PolicyConfig
+    path = str(tmp_path / "geo.ctpl")
+    spec = dataclasses.replace(SPEC, tier="disk", path=path, n_bits=4,
+                               bucket_capacity=8, seed=5,
+                               adapt=PolicyConfig(min_batches=1))
+    db = catapultdb.create(spec, data)
+    m = db.attach_maintainer()
+    q = data[:32] + 0.01
+    _, _, st = db.search(q, k=4)
+    m.observe(q, st)
+    db.save()
+    db.close()
+
+    re = catapultdb.open(path)                   # zero-config reopen
+    eng = re.backend
+    assert eng.n_bits == 4 and eng.bucket_capacity == 8 and eng.seed == 5
+    assert eng._cat.buckets.ids.shape == (2 ** 4, 8)
+    # db.spec is construction vocabulary: it must describe THIS index,
+    # not the caller's defaults
+    assert (re.spec.n_bits, re.spec.bucket_capacity, re.spec.seed) == \
+        (4, 8, 5)
+    ids, _, _ = re.search(q, k=4)
+    assert (ids >= 0).any()
+    re.close()
+
+
+# ----------------------------------------------------------- capability
+def test_caps_gate_operations_gracefully(data, tmp_path):
+    ram = catapultdb.create(SPEC, data)
+    assert ram.caps == catapultdb.Caps(tier="ram", mutable=True,
+                                       filtered=False, persistent=False,
+                                       sharded=False)
+    with pytest.raises(catapultdb.CapabilityError):
+        ram.save()
+    with pytest.raises(catapultdb.CapabilityError):
+        ram.search(data[:4], k=2, filter_labels=np.zeros(4, np.int32))
+    with pytest.raises(catapultdb.CapabilityError):
+        ram.upsert(data[:2], labels=np.zeros(2, np.int32))
+    assert ram.cache_stats is None
+    # and the mirror image: a FILTERED index refuses label-less upserts
+    # (the engine would silently tag them label 0)
+    filt = catapultdb.create(dataclasses.replace(SPEC, filters=True,
+                                                 spare_capacity=8),
+                             data, labels=np.zeros(data.shape[0], np.int32))
+    with pytest.raises(ValueError):
+        filt.upsert(data[:2])
+    ram.reset_io()                               # no-op, not an error
+
+    sh = catapultdb.create(
+        dataclasses.replace(SPEC, tier="sharded", n_shards=2,
+                            path=str(tmp_path / "s")), data)
+    with pytest.raises(catapultdb.CapabilityError):
+        sh.vectors
+    sh.close()
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        catapultdb.IndexSpec(tier="disk")            # path required
+    with pytest.raises(ValueError):
+        catapultdb.IndexSpec(tier="tape")
+    with pytest.raises(ValueError):
+        catapultdb.IndexSpec(tier="disk", path="x", mode="lsh_apg")
+    with pytest.raises(ValueError):
+        from repro.adapt import PolicyConfig
+        catapultdb.IndexSpec(mode="diskann", adapt=PolicyConfig())
+    with pytest.raises(ValueError):
+        catapultdb.create(dataclasses.replace(SPEC, dim=99),
+                          np.zeros((10, 4), np.float32))
+    with pytest.raises(ValueError):
+        catapultdb.create(dataclasses.replace(SPEC, filters=True),
+                          np.zeros((10, 4), np.float32))   # labels missing
+
+
+# ------------------------------------------------------------- requests
+def test_search_request_object_and_kwargs_agree(data):
+    db = catapultdb.create(dataclasses.replace(SPEC, mode="diskann"), data)
+    q = data[:8] + 0.01
+    a = db.search(q, k=3, beam_width=8)
+    b = db.search(catapultdb.SearchRequest(queries=q, k=3, beam_width=8))
+    np.testing.assert_array_equal(a.ids, b.ids)
+    assert a.ids.shape == (8, 3)
+    assert a.stats.hops.shape == (8,)
+    # spec defaults apply when the request leaves fields unset
+    c = db.search(q)
+    assert c.ids.shape == (8, SPEC.k)
+    # single-vector convenience: promoted to a 1-row batch
+    d = db.search(q[0], k=2)
+    assert d.ids.shape == (1, 2)
+    # request object + keyword overrides are exclusive — a silently
+    # outvoted publish=False would steer bucket state the caller
+    # explicitly opted out of
+    with pytest.raises(TypeError):
+        db.search(catapultdb.SearchRequest(queries=q), publish=False)
+    with pytest.raises(TypeError):
+        db.search(catapultdb.SearchRequest(queries=q), k=5)
+
+
+def test_publish_false_leaves_bucket_state_untouched(data):
+    db = catapultdb.create(SPEC, data)
+    q = data[:16] + 0.01
+    db.search(q, k=4)                            # warm the table
+    ids_before = np.asarray(db.backend._cat.buckets.ids).copy()
+    db.search(data[200:216] + 0.01, k=4, publish=False)
+    np.testing.assert_array_equal(
+        np.asarray(db.backend._cat.buckets.ids), ids_before)
+    # ...and a publishing search does mutate it (the control)
+    db.search(data[200:216] + 0.01, k=4)
+    assert not np.array_equal(np.asarray(db.backend._cat.buckets.ids),
+                              ids_before)
+
+
+def test_warm_batch_shapes_precompile(data):
+    db = catapultdb.create(
+        dataclasses.replace(SPEC, warm_batch_shapes=(4, 16)), data)
+    assert db.last_warm_ms is not None and db.last_warm_ms > 0
+    r = db.search(data[:4] + 0.01, k=SPEC.k)     # the pre-warmed shape
+    assert r.ids.shape == (4, SPEC.k)
+
+
+# ------------------------------------------------------------- frontend
+def test_frontend_mixed_k_flush_returns_per_ticket_shapes(data):
+    # diskann mode: results are a pure function of (graph, query, k,
+    # beam), so each ticket can be checked against a direct facade
+    # search without catapult bucket state drifting between calls
+    db = catapultdb.create(dataclasses.replace(SPEC, mode="diskann", k=4),
+                           data)
+    fe = db.serve(max_batch=8)
+    rng = np.random.default_rng(11)
+    want = {}
+    for i in range(21):
+        k = (3, 7, 4)[i % 3]
+        beam = 16 if i % 3 == 1 else None
+        q = data[rng.integers(0, data.shape[0])] + 0.01
+        t = fe.submit(q, k=k, beam_width=beam)
+        want[t] = (q, k)
+    out = fe.flush()
+    assert fe.pending == 0
+    assert set(out) == set(want)
+    for t, (q, k) in want.items():
+        ids, dists = out[t]
+        assert ids.shape == (k,) and dists.shape == (k,)
+        # each ticket's answer matches a direct same-k facade search
+        direct, _, _ = db.search(q, k=k,
+                                 beam_width=16 if k == 7 else None)
+        np.testing.assert_array_equal(ids, direct[0])
+
+    # grouping bound: 3 distinct (k, beam) pairs and max_batch=8 over 7
+    # tickets each -> exactly 3 dispatches this flush
+    assert fe.batches_dispatched == 3
+
+
+def test_frontend_default_k_ticket_path_still_works(data):
+    db = catapultdb.create(dataclasses.replace(SPEC, k=5), data)
+    fe = db.serve(max_batch=4)
+    tickets = [fe.submit(data[i] + 0.01) for i in range(6)]
+    out = fe.flush()
+    assert all(out[t][0].shape == (5,) for t in tickets)
+
+
+def test_serve_attaches_maintainer_from_spec(data):
+    from repro.adapt import PolicyConfig
+    db = catapultdb.create(
+        dataclasses.replace(SPEC, adapt=PolicyConfig(min_batches=1)), data)
+    fe = db.serve(max_batch=8)
+    assert fe.maintainer is not None and db.maintainer is fe.maintainer
+    fe.submit(data[0] + 0.01)
+    fe.flush()
+    assert fe.maintainer is db.maintainer
+    # maintain=False suppresses it even with a policy on the spec
+    fe2 = db.serve(max_batch=8, maintain=False)
+    assert fe2.maintainer is None

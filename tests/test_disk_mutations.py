@@ -3,38 +3,38 @@
 The paper sells catapults as a *transparent* layer: "preserves the full
 feature set of the underlying system, including filtered search, dynamic
 insertions, and disk-resident indices".  This harness holds the repo to
-that sentence: ONE randomized interleaving of
-``insert_batch`` / ``delete`` / ``search`` / ``consolidate`` drives the
-RAM engine, the CTPL disk engine, and the sharded (S=2) disk engine in
-lockstep, and asserts
+that sentence AT THE PUBLIC API: all three tiers are constructed through
+``repro.db.create`` and driven through the SAME ``Database`` object
+methods (``search``/``upsert``/``delete``/``consolidate``) — one
+randomized interleaving in lockstep — asserting
 
 * recall parity — disk and sharded recall within 1 point of RAM on the
   medrag_zipf workload (the acceptance bar),
-* identical tombstone visibility — no engine EVER returns a deleted id,
+* identical tombstone visibility — no tier EVER returns a deleted id,
   at any point of the interleaving, before or after consolidation,
-* durability — a CTPL v3 file reopened after ``save()`` resumes with
-  identical results and identical tombstone state.
+* durability — a CTPL v3 file / sharded manifest reopened through
+  ``repro.db.open`` resumes with identical results and identical
+  tombstone state.
 
-Engine ids differ across tiers (the sharded engine's global ids are
+Engine ids differ across tiers (the sharded tier's global ids are
 capacity-ranged per shard), so every assertion runs in corpus-row space
 via each driver's id↔row mapping.
 """
 from __future__ import annotations
 
-import os
+import dataclasses
 
 import numpy as np
 import pytest
 
-from repro.core import (VamanaParams, VectorSearchEngine, brute_force_knn,
-                        recall_at_k)
+from repro import db as catapultdb
+from repro.core import brute_force_knn, recall_at_k
 from repro.data.workloads import make_medrag_zipf
-from repro.store.io_engine import DiskVectorSearchEngine
-from repro.store.sharded_store import ShardedDiskVectorSearchEngine
 
-VP = VamanaParams(max_degree=16, build_beam=32, batch=512, seed=0)
-N0 = 900          # rows built into every engine up front
-POOL = 300        # rows fed in through insert_batch during the run
+SPEC = catapultdb.IndexSpec(mode="catapult", degree=16, build_beam=32,
+                            build_batch=512, seed=0, cache_frames=256)
+N0 = 900          # rows built into every database up front
+POOL = 300        # rows fed in through upsert during the run
 D = 16
 K = 8
 STEPS = 4
@@ -51,28 +51,28 @@ def world():
 
 
 class _Driver:
-    """Uniform mutation facade over one engine, asserting in row space."""
+    """Uniform mutation facade over one Database, asserting in row space."""
 
-    def __init__(self, name, eng, row_of_id):
+    def __init__(self, name, db: catapultdb.Database, row_of_id):
         self.name = name
-        self.eng = eng
+        self.db = db
         self.row_of = dict(row_of_id)      # engine id -> corpus row
 
     def insert(self, vectors, rows):
-        ids = self.eng.insert_batch(vectors)
+        ids = self.db.upsert(vectors)
         assert len(ids) == len(rows)
         for i, r in zip(ids, rows):
             self.row_of[int(i)] = int(r)
 
     def delete(self, rows):
         id_of = {r: i for i, r in self.row_of.items()}
-        self.eng.delete(np.asarray([id_of[int(r)] for r in rows], np.int64))
+        self.db.delete(np.asarray([id_of[int(r)] for r in rows], np.int64))
 
     def consolidate(self):
-        return self.eng.consolidate()
+        return self.db.consolidate()
 
     def search_rows(self, queries, k):
-        ids, _, _ = self.eng.search(queries, k=k, beam_width=2 * k)
+        ids, _, _ = self.db.search(queries, k=k, beam_width=2 * k)
         ids = np.asarray(ids)
         rows = np.full_like(ids, -1)
         for lane in range(ids.shape[0]):
@@ -98,25 +98,28 @@ def drivers(world, tmp_path_factory):
     corpus, _ = world
     base = corpus[:N0]
     td = tmp_path_factory.mktemp("mut")
-    ram = VectorSearchEngine(mode="catapult", vamana=VP, seed=0,
-                             capacity=N0 + POOL).build(base)
-    disk = DiskVectorSearchEngine(
-        mode="catapult", vamana=VP, seed=0, capacity=N0 + POOL,
-        cache_frames=256, store_path=str(td / "one.ctpl")).build(base)
-    shard = ShardedDiskVectorSearchEngine(
-        store_dir=str(td / "s2"), n_shards=2, mode="catapult", vamana=VP,
-        seed=0, cache_frames=256).build(base, spare_capacity=POOL + 2)
+    ram = catapultdb.create(
+        dataclasses.replace(SPEC, tier="ram", spare_capacity=POOL), base)
+    disk = catapultdb.create(
+        dataclasses.replace(SPEC, tier="disk", spare_capacity=POOL,
+                            path=str(td / "one.ctpl")), base)
+    shard = catapultdb.create(
+        dataclasses.replace(SPEC, tier="sharded", n_shards=2,
+                            spare_capacity=POOL + 2, path=str(td / "s2")),
+        base)
+    assert (ram.caps.mutable and disk.caps.persistent
+            and shard.caps.sharded)
     ident = {i: i for i in range(N0)}
     ds = [_Driver("ram", ram, ident), _Driver("disk", disk, ident),
-          _Driver("sharded", shard, _sharded_row_map(shard, N0))]
+          _Driver("sharded", shard, _sharded_row_map(shard.backend, N0))]
     yield ds
     disk.close()
     shard.close()
 
 
 def test_interleaved_mutation_parity(world, drivers):
-    """The headline: one interleaving, three tiers, recall within 1 point
-    and zero tombstone leaks anywhere."""
+    """The headline: one interleaving, three tiers, ONE object API,
+    recall within 1 point and zero tombstone leaks anywhere."""
     corpus, queries = world
     rng = np.random.default_rng(0xC47)
     live = list(range(N0))
@@ -125,7 +128,7 @@ def test_interleaved_mutation_parity(world, drivers):
     recalls = {d.name: [] for d in drivers}
 
     for step in range(STEPS):
-        # --- insert_batch: the same fresh rows into every engine
+        # --- upsert: the same fresh rows into every database
         rows = list(range(frontier, frontier + INSERTS_PER_STEP))
         vecs = corpus[rows]
         for d in drivers:
@@ -164,67 +167,71 @@ def test_interleaved_mutation_parity(world, drivers):
 
 
 def test_disk_reopen_after_mutations_resumes_identically(world, tmp_path):
-    """CTPL v3 durability: save() → load() resumes with identical results
-    (diskann mode — fully deterministic, no workload-adaptive state)."""
+    """CTPL v3 durability through the facade: save() → repro.db.open()
+    resumes with identical results (diskann mode — fully deterministic,
+    no workload-adaptive state)."""
     corpus, queries = world
     path = str(tmp_path / "resume.ctpl")
-    eng = DiskVectorSearchEngine(
-        mode="diskann", vamana=VP, seed=0, capacity=N0 + POOL,
-        cache_frames=256, store_path=path).build(corpus[:N0])
-    eng.insert_batch(corpus[N0: N0 + 120])
+    spec = dataclasses.replace(SPEC, tier="disk", mode="diskann",
+                               spare_capacity=POOL, path=path)
+    db = catapultdb.create(spec, corpus[:N0])
+    db.upsert(corpus[N0: N0 + 120])
     rng = np.random.default_rng(3)
     dels = rng.choice(N0 + 120, size=60, replace=False)
-    eng.delete(dels)
-    eng.consolidate()
-    eng.save()
+    db.delete(dels)
+    db.consolidate()
+    db.save()
     q = queries[:64]
-    ids_a, d_a, _ = eng.search(q, k=K)
+    ids_a, d_a, _ = db.search(q, k=K)
 
-    re = DiskVectorSearchEngine.load(path, mode="diskann", vamana=VP,
-                                     cache_frames=256)
-    assert re.n_active == eng.n_active and re.medoid == eng.medoid
-    np.testing.assert_array_equal(re._tomb_np, eng._tomb_np)
+    re = catapultdb.open(path, mode="diskann", spec=SPEC)
+    assert re.caps == db.caps
+    assert re.n_active == db.n_active
+    assert re.backend.medoid == db.backend.medoid
+    np.testing.assert_array_equal(np.asarray(re.tombstones),
+                                  np.asarray(db.tombstones))
     ids_b, d_b, _ = re.search(q, k=K)
     np.testing.assert_array_equal(ids_a, ids_b)
     np.testing.assert_allclose(d_a, d_b, rtol=1e-6)
-    # the reopened engine keeps mutating: delete more, still no leaks
+    # the reopened database keeps mutating: delete more, still no leaks
     more = rng.choice(np.asarray(ids_b[ids_b >= 0]), size=20, replace=False)
     re.delete(more)
     ids_c, _, _ = re.search(q, k=K)
     assert not np.isin(ids_c, more).any()
-    eng.close()
+    db.close()
     re.close()
 
 
 def test_sharded_reopen_after_mutations_resumes_identically(world, tmp_path):
     """Sharded save() round-trips tombstones AND catapult buckets — the
-    reopened directory answers the next batch identically."""
+    reopened manifest directory answers the next batch identically."""
     corpus, queries = world
     d = str(tmp_path / "s2rt")
-    eng = ShardedDiskVectorSearchEngine(
-        store_dir=d, n_shards=2, mode="catapult", vamana=VP, seed=0,
-        cache_frames=256).build(corpus[:N0], spare_capacity=POOL)
-    eng.insert_batch(corpus[N0: N0 + 100])
-    rng = np.random.default_rng(4)
+    db = catapultdb.create(
+        dataclasses.replace(SPEC, tier="sharded", n_shards=2,
+                            spare_capacity=POOL, path=d), corpus[:N0])
+    db.upsert(corpus[N0: N0 + 100])
     q = queries[:64]
-    ids0, _, _ = eng.search(q, k=1)
-    eng.delete(np.unique(ids0[ids0 >= 0]))
-    eng.save()
-    ids_a, d_a, _ = eng.search(q, k=K)
+    ids0, _, _ = db.search(q, k=1)
+    db.delete(np.unique(ids0[ids0 >= 0]))
+    db.save()
+    ids_a, d_a, _ = db.search(q, k=K)
 
-    re = ShardedDiskVectorSearchEngine.load(d, vamana=VP, cache_frames=256)
-    assert re.n_active == eng.n_active
+    re = catapultdb.open(d, spec=SPEC)
+    assert re.caps.sharded and re.caps.persistent
+    assert re.n_active == db.n_active
     ids_b, d_b, _ = re.search(q, k=K)
     np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
     np.testing.assert_allclose(np.asarray(d_a), np.asarray(d_b), rtol=1e-5)
     assert not np.isin(np.asarray(ids_b), np.unique(ids0[ids0 >= 0])).any()
-    eng.close()
+    db.close()
     re.close()
 
 
 def test_filtered_search_parity_on_disk_and_sharded(tmp_path):
     """Filtered (c,k)-ANN survives the disk tier: predicate satisfaction
-    is exact and recall tracks the RAM engine within 2 points."""
+    is exact and recall tracks the RAM tier within 2 points — all three
+    databases constructed and queried through the same facade calls."""
     from tests.conftest import make_clustered
     data, centers, assign = make_clustered(1000, D, 8, seed=21)
     labels = (assign % 4).astype(np.int32)
@@ -233,39 +240,39 @@ def test_filtered_search_parity_on_disk_and_sharded(tmp_path):
     q = (data[idx] + 0.1 * rng.normal(size=(64, D))).astype(np.float32)
     fl = labels[idx].astype(np.int32)
     truth = brute_force_knn(data, q, 5, labels=labels, filter_labels=fl)
+    fspec = dataclasses.replace(SPEC, filters=True)
 
-    ram = VectorSearchEngine(mode="catapult", vamana=VP, seed=0).build(
-        data, labels=labels, n_labels=4)
+    ram = catapultdb.create(fspec, data, labels=labels)
+    assert ram.caps.filtered
     ids_r, _, _ = ram.search(q, k=5, beam_width=16, filter_labels=fl)
     r_ram = recall_at_k(ids_r, truth)
 
-    disk = DiskVectorSearchEngine(
-        mode="catapult", vamana=VP, seed=0, cache_frames=256,
-        store_path=str(tmp_path / "f.ctpl")).build(
-        data, labels=labels, n_labels=4)
+    disk = catapultdb.create(
+        dataclasses.replace(fspec, tier="disk",
+                            path=str(tmp_path / "f.ctpl")),
+        data, labels=labels)
     ids_d, _, _ = disk.search(q, k=5, beam_width=16, filter_labels=fl)
     valid = ids_d >= 0
     assert valid.any()
     assert (labels[np.maximum(ids_d, 0)] == fl[:, None])[valid].all()
     assert recall_at_k(ids_d, truth) >= r_ram - 0.02
 
-    shard = ShardedDiskVectorSearchEngine(
-        store_dir=str(tmp_path / "fs"), n_shards=2, mode="catapult",
-        vamana=VP, seed=0, cache_frames=256).build(
-        data, labels=labels, n_labels=4)
+    shard = catapultdb.create(
+        dataclasses.replace(fspec, tier="sharded", n_shards=2,
+                            path=str(tmp_path / "fs")),
+        data, labels=labels)
     ids_s, _, _ = shard.search(q, k=5, beam_width=16, filter_labels=fl)
     # global ids == corpus rows (no spare capacity at build)
     valid = ids_s >= 0
     assert valid.any()
     assert (labels[np.maximum(ids_s, 0)] == fl[:, None])[valid].all()
     assert recall_at_k(ids_s, truth) >= r_ram - 0.02
-    # a labeled store is reloadable now (pre-v3 it raised)
+    # a labeled store is reloadable (pre-v3 it raised) — and the facade
+    # reopens it with the filtered capability intact
     disk.save()
     disk.close()
-    re = DiskVectorSearchEngine.load(str(tmp_path / "f.ctpl"),
-                                     mode="catapult", vamana=VP,
-                                     cache_frames=256)
-    assert re.filtered and re.n_labels == 4
+    re = catapultdb.open(str(tmp_path / "f.ctpl"), spec=SPEC)
+    assert re.caps.filtered and re.n_labels == 4
     ids_e, _, _ = re.search(q, k=5, beam_width=16, filter_labels=fl)
     valid = ids_e >= 0
     assert (labels[np.maximum(ids_e, 0)] == fl[:, None])[valid].all()

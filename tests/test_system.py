@@ -1,15 +1,18 @@
 """End-to-end behaviour: the paper's headline claims on a replayed workload,
-plus the Table-1 feature matrix as executable assertions."""
+plus the Table-1 feature matrix as executable assertions — everything
+constructed and driven through the ``repro.db`` facade."""
 from __future__ import annotations
+
+import dataclasses
 
 import numpy as np
 import pytest
 
-from repro.core import (VamanaParams, VectorSearchEngine, brute_force_knn,
-                        recall_at_k)
+from repro import db as catapultdb
+from repro.core import brute_force_knn, recall_at_k
 from tests.conftest import make_clustered
 
-VP = VamanaParams(max_degree=16, build_beam=32, batch=512)
+SPEC = catapultdb.IndexSpec(degree=16, build_beam=32, build_batch=512)
 
 
 def _zipf_workload(centers, n_queries, d, seed, zipf_a=1.8):
@@ -26,8 +29,8 @@ def test_headline_claim_biased_workload(corpus):
     data, centers, _ = corpus
     q = _zipf_workload(centers, 256, data.shape[1], seed=71)
     truth = brute_force_knn(data, q, 1)
-    dsk = VectorSearchEngine(mode="diskann", vamana=VP).build(data)
-    cat = VectorSearchEngine(mode="catapult", vamana=VP).build(data)
+    dsk = catapultdb.create(dataclasses.replace(SPEC, mode="diskann"), data)
+    cat = catapultdb.create(dataclasses.replace(SPEC, mode="catapult"), data)
 
     ids_d, _, st_d = dsk.search(q, k=1, beam_width=4)
     # stream in two halves: the first warms buckets for the second
@@ -48,8 +51,8 @@ def test_uniform_workload_no_recall_regression(corpus):
     rng = np.random.default_rng(72)
     q = rng.uniform(-1, 1, size=(128, data.shape[1])).astype(np.float32) * 4
     truth = brute_force_knn(data, q, 4)
-    dsk = VectorSearchEngine(mode="diskann", vamana=VP).build(data)
-    cat = VectorSearchEngine(mode="catapult", vamana=VP).build(data)
+    dsk = catapultdb.create(dataclasses.replace(SPEC, mode="diskann"), data)
+    cat = catapultdb.create(dataclasses.replace(SPEC, mode="catapult"), data)
     ids_d, _, _ = dsk.search(q, k=4, beam_width=8)
     cat.search(q, k=4, beam_width=8)
     ids_c, _, _ = cat.search(q, k=4, beam_width=8)
@@ -57,29 +60,38 @@ def test_uniform_workload_no_recall_regression(corpus):
 
 
 class TestFeatureMatrix:
-    """Table 1 of the paper, as executable checks."""
+    """Table 1 of the paper, as executable checks — the ``caps`` record
+    is the feature matrix's API spelling."""
 
     def test_catapultdb_supports_everything(self):
         data, centers, assign = make_clustered(800, 16, 8, seed=81)
         labels = (assign % 3).astype(np.int32)
-        eng = VectorSearchEngine(mode="catapult", vamana=VP, capacity=1000,
-                                 ).build(data, labels=labels, n_labels=3)
+        db = catapultdb.create(
+            dataclasses.replace(SPEC, mode="catapult", filters=True,
+                                spare_capacity=200),
+            data, labels=labels)
+        assert db.caps.mutable and db.caps.filtered
         # accelerated search: catapult layer active
         q = (data[:32] + 0.01).astype(np.float32)
-        eng.search(q, k=2, beam_width=8)
-        _, _, st = eng.search(q, k=2, beam_width=8)
+        db.search(q, k=2, beam_width=8)
+        _, _, st = db.search(q, k=2, beam_width=8)
         assert st.used.mean() > 0.8                      # accelerated (LSH)
-        eng.insert(data[:8] + 20.0, labels=np.zeros(8, np.int32))  # insertions
-        ids, _, _ = eng.search(q, k=2, beam_width=8,
-                               filter_labels=np.zeros(32, np.int32))  # filtering
+        db.upsert(data[:8] + 20.0, labels=np.zeros(8, np.int32))  # insertions
+        ids, _, _ = db.search(q, k=2, beam_width=8,
+                              filter_labels=np.zeros(32, np.int32))  # filtering
         assert np.all(labels[np.maximum(ids, 0)][ids >= 0] == 0)
 
     def test_lsh_apg_lacks_filtering(self):
         """LSH-APG's entry table is filter-oblivious by construction: its
-        entries may violate any predicate (that is the paper's critique)."""
+        entries may violate any predicate (that is the paper's critique) —
+        the caps record says so, and the facade enforces it."""
         data, _, assign = make_clustered(800, 16, 8, seed=82)
-        eng = VectorSearchEngine(mode="lsh_apg", vamana=VP).build(data)
-        assert eng._labels_np is None  # no label machinery in its index
+        db = catapultdb.create(dataclasses.replace(SPEC, mode="lsh_apg"),
+                               data)
+        assert not db.caps.filtered
+        assert db.backend._labels_np is None  # no label machinery at all
+        with pytest.raises(catapultdb.CapabilityError):
+            db.search(data[:4], k=2, filter_labels=np.zeros(4, np.int32))
 
     def test_proximity_not_insertion_aware(self):
         # covered quantitatively by test_baselines:
