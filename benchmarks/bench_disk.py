@@ -173,6 +173,12 @@ def run_facade_warmup(n=2_500, n_queries=512) -> list[str]:
             warm_batch_shapes=(BATCH,))
         db = catapultdb.create(spec, wl.corpus)
         warm_ms = db.last_warm_ms
+        # per-shape compile cost: on a multi-shape pre-warm this names
+        # the batch size that dominates, so a gate failure points at the
+        # offending signature, not just a bad total
+        worst = max(db.last_warm_breakdown,
+                    key=db.last_warm_breakdown.get)
+        worst_ms = db.last_warm_breakdown[worst]
         t0 = time.perf_counter()
         ids, _, _ = db.search(wl.queries[:BATCH], k=K, beam_width=BEAM)
         first_ms = (time.perf_counter() - t0) * 1e3
@@ -181,6 +187,7 @@ def run_facade_warmup(n=2_500, n_queries=512) -> list[str]:
         db.close()
     return [f"facade/warmup/disk/k{K},{first_ms * 1e3 / BATCH:.1f},"
             f"warmup_ms={warm_ms:.1f};first_query_warm_ms={first_ms:.2f};"
+            f"warmup_worst_shape={worst};warmup_worst_shape_ms={worst_ms:.1f};"
             f"recall={rec:.3f}"]
 
 

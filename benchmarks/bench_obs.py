@@ -1,0 +1,169 @@
+"""fig_obs/* — the observability layer's cost and its trace readout.
+
+Three sections:
+
+* ``fig_obs/overhead/stationary`` — the headline claim the CI gate
+  enforces: serving with the metrics registry ENABLED must stay within
+  2% QPS of serving with it disabled (``spec.metrics=False``) on a
+  stationary uniform stream.  Methodology mirrors the adapt layer's
+  stationary gate (bench_adapt.run_stationary): queries never repeat,
+  and timing interleaves at BATCH granularity — both databases serve
+  the same fresh batch back to back, so scheduler noise on a shared CI
+  runner hits both alike instead of manufacturing a regression.
+* ``fig_obs/trace/*`` — one ``explain=True`` query batch per tier
+  (RAM + disk), reporting the per-stage wall-time split
+  (route / fetch / rerank) that make_report.py renders, plus
+  ``explain_parity`` (1.0 iff the explain call returned the exact
+  ids of a plain call on the same frozen state — the acceptance
+  criterion that explain observes the search, never changes it).
+* ``fig_obs/serve/window`` — the frontend's rolling window under a
+  ticketed mixed-k flush pattern: rolling QPS, mean batch occupancy,
+  flush p99.
+
+CLI: ``--quick`` (CI-sized corpora), ``--json PATH`` (machine-readable
+results for the bench-regression gate, see check_regression.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.bench_disk import rows_to_json
+from benchmarks.common import SPEC, VP, make_db
+from repro import db as catapultdb
+from repro.core.vamana import build_vamana
+from repro.data.workloads import make_medrag_zipf, make_uniform
+
+K = 8
+BEAM = 2 * K
+BATCH = 256
+
+
+def run_overhead(n=3_000, n_queries=2_048, repeats=5) -> list[str]:
+    """Metrics-enabled vs metrics-disabled serving, interleaved."""
+    wl = make_uniform(n=n, n_queries=n_queries)
+    prebuilt = build_vamana(wl.corpus, VP)
+    nb = (wl.queries.shape[0] // BATCH) * BATCH
+    rng = np.random.default_rng(7)
+
+    def fresh_stream():
+        return rng.uniform(-1, 1, size=(nb, wl.queries.shape[1])
+                           ).astype(np.float32) * 4.0
+
+    spec_on = dataclasses.replace(SPEC, mode="catapult", seed=0)
+    spec_off = dataclasses.replace(spec_on, metrics=False)
+    db_off = catapultdb.create(spec_off, wl.corpus, prebuilt=prebuilt)
+    db_on = catapultdb.create(spec_on, wl.corpus, prebuilt=prebuilt)
+    assert db_on.registry.enabled and not db_off.registry.enabled
+
+    # settle: compile the shared (batch, k, beam) signature before any
+    # clock starts (jit cache is process-wide, so one pass covers both)
+    for db in (db_off, db_on):
+        stream = fresh_stream()
+        for lo in range(0, nb, BATCH):
+            db.search(stream[lo: lo + BATCH], k=K, beam_width=BEAM)
+
+    t_off = t_on = 0.0
+    for _ in range(repeats):
+        stream = fresh_stream()
+        for lo in range(0, nb, BATCH):
+            q = stream[lo: lo + BATCH]
+            t0 = time.perf_counter()
+            db_off.search(q, k=K, beam_width=BEAM)
+            t1 = time.perf_counter()
+            db_on.search(q, k=K, beam_width=BEAM)
+            t2 = time.perf_counter()
+            t_off += t1 - t0
+            t_on += t2 - t1
+    overhead = (t_on - t_off) / t_off * 100.0
+    total = repeats * nb
+    snap = db_on.metrics()
+    return [f"fig_obs/overhead/stationary,{t_on / total * 1e6:.1f},"
+            f"metrics_overhead_pct={overhead:.2f};"
+            f"qps_plain={total / t_off:.0f};"
+            f"qps_metrics={total / t_on:.0f};"
+            f"requests_counted="
+            f"{snap['catapultdb_search_requests_total']:.0f}"]
+
+
+def run_trace(n=2_000, n_queries=512) -> list[str]:
+    """Per-stage trace split + explain/plain parity, RAM and disk."""
+    wl = make_medrag_zipf(n=n, n_queries=n_queries)
+    q = wl.queries[:BATCH]
+    out = []
+    with tempfile.TemporaryDirectory() as td:
+        for tier in ("ram", "disk"):
+            db = make_db(wl, "catapult", tier=tier, seed=0,
+                         store_path=(os.path.join(td, "t.ctpl")
+                                     if tier != "ram" else None))
+            db.search(q, k=K, beam_width=BEAM)       # jit warm-up
+            # publish=False freezes the bucket state, so the plain and
+            # explain calls below traverse identical catapult tables —
+            # parity is exact, not probabilistic
+            plain = db.search(q, k=K, beam_width=BEAM, publish=False)
+            t0 = time.perf_counter()
+            tr = db.search(q, k=K, beam_width=BEAM, publish=False,
+                           explain=True)
+            dt = time.perf_counter() - t0
+            parity = float(np.array_equal(plain.ids, tr.ids))
+            out.append(
+                f"fig_obs/trace/{tier}/k{K},{dt / BATCH * 1e6:.1f},"
+                f"stage_route_ms={tr.stage_ms('route'):.3f};"
+                f"stage_fetch_ms={tr.stage_ms('fetch'):.3f};"
+                f"stage_rerank_ms={tr.stage_ms('rerank'):.3f};"
+                f"total_ms={tr.total_ms:.3f};"
+                f"catapult_used={tr.catapult_used};"
+                f"hops={float(np.mean(tr.hops)):.1f};"
+                f"explain_parity={parity:.0f}")
+            db.close()
+    return out
+
+
+def run_serve_window(n=2_000, n_queries=1_024) -> list[str]:
+    """The frontend's rolling window under mixed-k ticketed flushes."""
+    wl = make_medrag_zipf(n=n, n_queries=n_queries)
+    db = make_db(wl, "catapult", seed=0)
+    fe = db.serve(max_batch=64, k=K)
+    q = wl.queries
+    n_q = (q.shape[0] // 64) * 64
+    for lo in range(0, n_q, 64):
+        for row in range(lo, lo + 64):
+            # alternating k exercises the per-(k, beam) chunk grouping
+            fe.submit(q[row], k=K if row % 2 == 0 else K // 2)
+        fe.flush()
+    snap = fe.window.snapshot()
+    return [f"fig_obs/serve/window,{1e6 / max(snap['qps'], 1e-9):.1f},"
+            f"qps={snap['qps']:.0f};"
+            f"batch_occupancy={snap['batch_occupancy']:.3f};"
+            f"flush_p50_ms={snap['flush_p50_ms']:.2f};"
+            f"flush_p99_ms={snap['flush_p99_ms']:.2f};"
+            f"flushes={snap['flushes']}"]
+
+
+def run(n=3_000, n_queries=2_048) -> list[str]:
+    return (run_overhead(n=n, n_queries=n_queries)
+            + run_trace(n=min(n, 2_000), n_queries=min(n_queries, 512))
+            + run_serve_window(n=min(n, 2_000), n_queries=min(n_queries,
+                                                             1_024)))
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized corpora (matches benchmarks.run --quick)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write structured results (regression gate)")
+    args = p.parse_args()
+    n, nq = (2_500, 1_536) if args.quick else (8_000, 3_072)
+    rows = run(n=n, n_queries=nq)
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"corpus_n": n, "n_queries": nq,
+                       "results": rows_to_json(rows)}, f, indent=1)

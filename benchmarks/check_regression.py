@@ -19,6 +19,10 @@ baseline entry:
 * ``stationary_overhead_pct`` — the adapt layer's stationary cost must
   stay under ``STATIONARY_OVERHEAD_MAX`` (absolute, not
   baseline-relative: the acceptance bar is <2% QPS, full stop),
+* ``metrics_overhead_pct`` — the observability layer's serving cost
+  (fig_obs rows): metrics-enabled serving must stay within
+  ``METRICS_OVERHEAD_MAX`` of metrics-disabled on a stationary
+  workload (absolute, same reasoning as the adapt gate),
 * ``first_query_warm_ms`` — the facade's warmup claim (facade/warmup
   rows): the first real query after ``create()``'s jit pre-warm must
   cost under ``WARMUP_COMPILE_FRACTION`` of the measured ``warmup_ms``
@@ -60,6 +64,7 @@ RECALL_EPS = 0.005           # float-noise allowance across platforms
 MAX_READS_REGRESSION = 0.10  # +10% block reads = regression
 SHARD_PARITY_POINTS = 0.01   # S=4 within 1 recall point of S=1
 STATIONARY_OVERHEAD_MAX = 2.0  # % QPS the adapt layer may cost, absolute
+METRICS_OVERHEAD_MAX = 2.0   # % QPS the metrics registry may cost, absolute
 RECOVERY_SLACK = 1.5         # fresh recovery may take 1.5x the baseline's
 WARMUP_COMPILE_FRACTION = 0.5  # first warm query vs the warmup it skipped
 
@@ -67,7 +72,8 @@ WARMUP_COMPILE_FRACTION = 0.5  # first warm query vs the warmup it skipped
 # of these is a configuration error, not a pass
 GATE_KEYS = ("block_reads", "recall", "post_delete_recall",
              "tombstone_leaks", "post_shift_recovery_queries",
-             "stationary_overhead_pct", "first_query_warm_ms")
+             "stationary_overhead_pct", "metrics_overhead_pct",
+             "first_query_warm_ms")
 
 
 def _metric(name: str, row: dict, key: str, side: str,
@@ -146,6 +152,13 @@ def _check_gated_row(name: str, b: dict, c: dict,
                 f"{name}: adapt layer costs {ov:.2f}% QPS on a "
                 f"stationary uniform stream (max "
                 f"{STATIONARY_OVERHEAD_MAX}%)")
+    if "metrics_overhead_pct" in b:
+        ov = _metric(name, c, "metrics_overhead_pct", "fresh", failures)
+        if ov is not None and ov > METRICS_OVERHEAD_MAX:
+            failures.append(
+                f"{name}: metrics registry costs {ov:.2f}% QPS on a "
+                f"stationary stream (max {METRICS_OVERHEAD_MAX}%) — the "
+                f"observability layer stopped being near-free")
     # facade warmup gate: fresh-run ratio (machine-independent) — the
     # baseline row's presence opts the row in, its values are context
     if "first_query_warm_ms" in b:
@@ -154,11 +167,19 @@ def _check_gated_row(name: str, b: dict, c: dict,
         if first is not None and warm is not None:
             ceiling = WARMUP_COMPILE_FRACTION * warm
             if first > ceiling:
+                # the per-shape breakdown names the signature to chase
+                worst = c.get("warmup_worst_shape")
+                worst_ms = c.get("warmup_worst_shape_ms")
+                shape_note = (
+                    f"; slowest pre-warm shape: batch={worst:.0f} "
+                    f"({worst_ms:.1f}ms)" if worst is not None
+                    and worst_ms is not None else "")
                 failures.append(
                     f"{name}: first post-warm query took {first:.1f}ms > "
                     f"{ceiling:.1f}ms ({WARMUP_COMPILE_FRACTION:.0%} of "
                     f"the {warm:.1f}ms open-time warmup) — the facade "
-                    f"pre-warm no longer covers the serving signature")
+                    f"pre-warm no longer covers the serving signature"
+                    f"{shape_note}")
 
 
 def check(current: dict, baseline: dict) -> list[str]:

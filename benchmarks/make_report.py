@@ -2,6 +2,10 @@
 
 Usage: PYTHONPATH=src python -m benchmarks.make_report [--dir DIR]
 Prints markdown to stdout (pasted into EXPERIMENTS.md).
+
+``--obs PATH`` additionally renders the per-stage search-time breakdown
+(route / fetch / rerank, from the ``explain=True`` traces) out of a
+``bench_obs --json`` artifact.
 """
 from __future__ import annotations
 
@@ -9,6 +13,39 @@ import argparse
 import glob
 import json
 import os
+
+
+def obs_breakdown(path: str) -> None:
+    """Markdown table: where one query's wall time goes, per tier.
+
+    Reads the ``fig_obs/trace/*`` rows of a bench_obs artifact — each
+    carries the stage wall times one traced batch recorded — and prints
+    the route/fetch/rerank split as ms and as % of the traced total, so
+    the report answers 'is this workload entry-bound, I/O-bound, or
+    rerank-bound?' per tier at a glance.
+    """
+    with open(path) as f:
+        results = json.load(f)["results"]
+    rows = {name: m for name, m in results.items()
+            if name.startswith("fig_obs/trace/")}
+    if not rows:
+        print(f"(no fig_obs/trace rows in {path})")
+        return
+    print("| tier | route ms | fetch ms | rerank ms | total ms | "
+          "route % | fetch % | rerank % | parity |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for name, m in sorted(rows.items()):
+        tier = name.split("/")[2]
+        stages = {s: m.get(f"stage_{s}_ms", 0.0)
+                  for s in ("route", "fetch", "rerank")}
+        total = m.get("total_ms", 0.0)
+        pct = {s: (v / total * 100.0 if total else 0.0)
+               for s, v in stages.items()}
+        parity = "Y" if m.get("explain_parity", 0.0) >= 1.0 else "**N**"
+        print(f"| {tier} | {stages['route']:.2f} | {stages['fetch']:.2f} "
+              f"| {stages['rerank']:.2f} | {total:.2f} "
+              f"| {pct['route']:.0f} | {pct['fetch']:.0f} "
+              f"| {pct['rerank']:.0f} | {parity} |")
 
 
 def fmt_s(x):
@@ -23,7 +60,14 @@ def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--dir", default="benchmarks/dryrun_results")
     p.add_argument("--mesh", default="sp", choices=["sp", "mp", "both"])
+    p.add_argument("--obs", default=None, metavar="PATH",
+                   help="bench_obs --json artifact: also render the "
+                        "per-stage trace breakdown")
     args = p.parse_args()
+
+    if args.obs:
+        obs_breakdown(args.obs)
+        print()
 
     rows = []
     for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):

@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows.  Sections:
   fig7_adapt/*          — workload shifts: adaptive vs frozen catapult,
                           recovery time + stationary gate overhead
   fig12_disk/*          — disk-resident tier: block reads / cache hit rate
+  fig_obs/*             — observability: metrics overhead gate, explain
+                          trace stage split, serving rolling window
   kernel/*              — Pallas kernel microbenches (interpret mode)
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
@@ -32,7 +34,8 @@ def main() -> None:
 
     from benchmarks import (bench_ablations, bench_adapt, bench_disk,
                             bench_dynamic, bench_filtered, bench_hyperparams,
-                            bench_kernels, bench_substrates, bench_workloads)
+                            bench_kernels, bench_obs, bench_substrates,
+                            bench_workloads)
 
     quick = args.quick
     sections = {
@@ -60,6 +63,9 @@ def main() -> None:
         "disk": lambda: bench_disk.run(
             n=4_000 if quick else 12_000,
             n_queries=1_024 if quick else 3_072),
+        "obs": lambda: bench_obs.run(
+            n=2_500 if quick else 8_000,
+            n_queries=1_536 if quick else 3_072),
         "kernels": bench_kernels.run,
     }
     only = set(args.only.split(",")) if args.only else None

@@ -54,6 +54,12 @@ with tempfile.TemporaryDirectory() as td:
           f"(cleared {s['flushed_entries']} stale shortcuts), "
           f"TTL evictions={s['ttl_evicted']}, "
           f"shadow batches={s['shadows']}")
+    # serving health from the frontend's rolling window (repro.obs):
+    # the same numbers db.metrics() exports as catapultdb_serve_*
+    w = fe.window.snapshot()
+    print(f"serving window: {w['qps']:.0f} qps over {w['flushes']} "
+          f"flushes, occupancy {w['batch_occupancy']:.0%}, "
+          f"flush p99 {w['flush_p99_ms']:.1f}ms")
     print(f"utility gate: catapults enabled={s['enabled']} at measured "
           f"hop saving {s['hop_saving']:.1%} (hops {s['hops_ewma']:.1f} "
           f"vs diskann shadow {s['base_hops_ewma']:.1f}) — on a corpus "

@@ -25,6 +25,7 @@ the host keeps numpy mirrors for graph surgery (build/insert).
 from __future__ import annotations
 
 import dataclasses
+from contextlib import nullcontext
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -286,18 +287,31 @@ class VectorSearchEngine:
             return pq_mod.adc_dist_fn(self._pq, self._codes)
         return l2_dist_fn(self._vec)
 
+    @property
+    def cache_stats(self):
+        """Uniform across tiers: the RAM engine has no block cache, so
+        its record is all-zero rather than absent — callers never need
+        hasattr/None special-casing to scrape one shape of counters."""
+        from repro.store.cache import CacheStats   # lazy: import cycle
+        return CacheStats(hits=0, misses=0, block_reads=0,
+                          prefetch_batches=0, batched_reads=0)
+
     # ---------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,
                beam_width: int | None = None,
                filter_labels: np.ndarray | None = None,
                max_iters: int | None = None,
-               publish_mask: np.ndarray | None = None
+               publish_mask: np.ndarray | None = None,
+               trace=None
                ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
         """Batched k-NN search.  Returns (ids (B,k), dists (B,k), stats).
 
         ``publish_mask`` ((B,) bool) opts lanes out of the catapult
         bucket publish and usage stats — the serving frontend masks its
         padded lanes, and a frozen-catapult baseline passes all-False.
+        ``trace`` is an optional ``repro.obs.TraceRecorder``: when
+        supplied, the route/rerank stages are timed into it (each stage
+        syncs the device, so pass one only on explain queries).
         """
         queries = jnp.asarray(queries, jnp.float32)
         b = queries.shape[0]
@@ -315,14 +329,19 @@ class VectorSearchEngine:
                    if filter_labels is not None
                    else jnp.full((b,), -1, jnp.int32))
 
-        res, used, won = self._dispatch(queries, flabels, spec,
-                                        publish_mask=publish_mask)
+        stage = trace.stage if trace is not None else (lambda _: nullcontext())
+        with stage("route"):
+            res, used, won = self._dispatch(queries, flabels, spec,
+                                            publish_mask=publish_mask)
+            if trace is not None:
+                jax.block_until_ready(res.ids)
 
-        ids, dists = np.asarray(res.ids), np.asarray(res.dists)
-        if self.pq_subspaces:   # full-precision rerank (DiskANN final fetch)
-            rr = jax.vmap(partial(pq_mod.rerank, self._vec, k=k))(
-                queries, res.ids)
-            ids, dists = np.asarray(rr[0]), np.asarray(rr[1])
+        with stage("rerank"):
+            ids, dists = np.asarray(res.ids), np.asarray(res.dists)
+            if self.pq_subspaces:  # full-precision rerank (DiskANN final fetch)
+                rr = jax.vmap(partial(pq_mod.rerank, self._vec, k=k))(
+                    queries, res.ids)
+                ids, dists = np.asarray(rr[0]), np.asarray(rr[1])
         stats = SearchStats(hops=np.asarray(res.hops),
                             ndists=np.asarray(res.ndists), used=used, won=won)
         return ids, dists, stats

@@ -13,6 +13,8 @@ exposes the whole feature matrix behind a ``caps`` record.
     d = catapultdb.create(catapultdb.IndexSpec(tier="disk",
                                                path="idx.ctpl"), vectors)
     ids, dists, stats = d.search(queries, k=10)
+    trace = d.search(queries, k=10, explain=True)   # SearchTrace
+    scrape = d.metrics("prometheus")                # or "dict" / "json"
     frontend = d.serve(max_batch=64)          # micro-batching + maintainer
     d.save(); d.close()
     d = catapultdb.open("idx.ctpl")           # sniffs tier + version
@@ -31,8 +33,9 @@ from repro.db.database import Database
 from repro.db.factory import create, open, sniff
 from repro.db.spec import (CapabilityError, Caps, IndexSpec, SearchRequest,
                            SearchResult)
+from repro.obs import SearchTrace
 
 __all__ = [
     "CapabilityError", "Caps", "Database", "IndexSpec", "SearchRequest",
-    "SearchResult", "create", "open", "sniff",
+    "SearchResult", "SearchTrace", "create", "open", "sniff",
 ]

@@ -17,6 +17,13 @@ Dispatch detail the facade owns: every search passes an EXPLICIT
 keeping it always-an-array gives warmup, serving-frontend, and direct
 facade calls ONE compiled signature per (batch, k, beam) — which is
 what makes ``warm()``'s pre-compilation actually cover the hot path.
+
+Observability (repro.obs) is wired here too: every database owns a
+``MetricsRegistry`` (``spec.metrics=False`` swaps in a no-op one), the
+search path publishes into pre-resolved instruments, component counters
+(node cache, maintainer, serving window) ride in as pull collectors,
+and ``db.metrics()`` / ``db.search(..., explain=True)`` are the two
+readouts — a scrape of the aggregates, or one query's full trace.
 """
 from __future__ import annotations
 
@@ -27,6 +34,10 @@ import numpy as np
 
 from repro.db.spec import (CapabilityError, Caps, IndexSpec, SearchRequest,
                            SearchResult)
+from repro.obs import MetricsRegistry, TraceRecorder, build_search_trace
+
+# batch-mean hop counts per search — graph-walk lengths, not latencies
+_HOP_EDGES = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0)
 
 
 class Database:
@@ -39,13 +50,97 @@ class Database:
         self.caps = caps
         self.maintainer = None       # set by serve()/attach_maintainer()
         self.last_warm_ms: Optional[float] = None
+        self.last_warm_breakdown: dict = {}   # {batch_shape: ms}
+        self.registry = MetricsRegistry(enabled=spec.metrics)
+        self._wire_metrics()
+
+    def _wire_metrics(self) -> None:
+        """Pre-resolve the hot-path instruments (one dict lookup per
+        metric per DATABASE, not per query) and register the pull
+        collectors.  On a disabled registry every instrument is the
+        shared ``NULL_INSTRUMENT`` and the collectors never register."""
+        reg = self.registry
+        self._m_requests = reg.counter("catapultdb_search_requests_total")
+        self._m_queries = reg.counter("catapultdb_search_queries_total")
+        self._m_explains = reg.counter("catapultdb_search_explain_total")
+        self._m_latency = reg.histogram("catapultdb_search_latency_ms")
+        self._m_hops = reg.histogram("catapultdb_search_hops",
+                                     edges=_HOP_EDGES)
+        self._m_used = reg.counter("catapultdb_catapult_used_total")
+        self._m_won = reg.counter("catapultdb_catapult_won_total")
+        self._m_block_reads = reg.counter("catapultdb_io_block_reads_total")
+        self._m_cache_hits = reg.counter("catapultdb_io_cache_hits_total")
+        if not reg.enabled:
+            return
+
+        def cache_collector() -> dict:
+            st = self.backend.cache_stats
+            return {"catapultdb_cache_hits": float(st.hits),
+                    "catapultdb_cache_misses": float(st.misses),
+                    "catapultdb_cache_block_reads": float(st.block_reads),
+                    "catapultdb_cache_prefetch_batches":
+                        float(st.prefetch_batches),
+                    "catapultdb_cache_batched_reads":
+                        float(st.batched_reads)}
+
+        def adapt_collector() -> dict:
+            m = self.maintainer       # read dynamically: attach_maintainer
+            if m is None:             # may run after this registers
+                return {}
+            return {f"catapultdb_adapt_{key}": float(v)
+                    for key, v in m.snapshot().items()
+                    if isinstance(v, (bool, int, float, np.bool_,
+                                      np.integer, np.floating))}
+
+        reg.register_collector(cache_collector)
+        reg.register_collector(adapt_collector)
+
+    def _record_search(self, batch: int, ms: float, stats,
+                       explained: bool) -> None:
+        self._m_requests.inc()
+        self._m_queries.inc(batch)
+        self._m_latency.observe(ms)
+        self._m_hops.observe(float(np.mean(stats.hops)))
+        used = int(np.asarray(stats.used).sum())
+        if used:
+            self._m_used.inc(used)
+        won = int(np.asarray(stats.won).sum())
+        if won:
+            self._m_won.inc(won)
+        if stats.block_reads is not None:
+            self._m_block_reads.inc(
+                int(np.asarray(stats.block_reads).sum()))
+            self._m_cache_hits.inc(int(np.asarray(stats.cache_hits).sum()))
+        if explained:
+            self._m_explains.inc()
+
+    # ---------------------------------------------------------------- metrics
+    def metrics(self, fmt: str = "dict"):
+        """One snapshot of every published metric + polled collector.
+
+        ``fmt='dict'`` (default) returns the plain mapping —
+        counters/gauges as floats, histograms as
+        ``{count, sum, mean, p50, p95, p99}``; ``'json'`` the same as a
+        JSON string; ``'prometheus'`` the text exposition format a
+        scraper ingests as-is.  A ``spec.metrics=False`` database
+        returns an empty snapshot.
+        """
+        if fmt == "dict":
+            return self.registry.snapshot()
+        if fmt == "json":
+            return self.registry.to_json()
+        if fmt == "prometheus":
+            return self.registry.to_prometheus()
+        raise ValueError(f"fmt must be 'dict', 'json' or 'prometheus', "
+                         f"got {fmt!r}")
 
     # ---------------------------------------------------------------- search
     def search(self, request, *, k: Optional[int] = None,
                beam_width: Optional[int] = None,
                filter_labels: Optional[np.ndarray] = None,
                publish: Optional[bool] = None,
-               max_iters: Optional[int] = None) -> SearchResult:
+               max_iters: Optional[int] = None,
+               explain: bool = False):
         """Serve one batched request.
 
         ``request`` is a ``SearchRequest`` — or a raw (B, d) query array
@@ -53,6 +148,14 @@ class Database:
         spelling every bench and example uses).  The two spellings are
         exclusive: keywords alongside a ``SearchRequest`` raise rather
         than being silently outvoted by the request's fields.
+
+        ``explain=True`` returns a ``repro.obs.SearchTrace`` instead of
+        a ``SearchResult`` — same ids/dists, plus the per-lane entry
+        point taken, catapult hit/win counts, hops, blocks read, and
+        per-stage wall times.  It is a facade-level switch (how to
+        REPORT the search, not what to search), so it composes with a
+        ``SearchRequest`` rather than conflicting with one; each timed
+        stage syncs the device, so keep it off the steady-state path.
         """
         if isinstance(request, SearchRequest):
             extras = dict(k=k, beam_width=beam_width,
@@ -79,11 +182,24 @@ class Database:
         if q.ndim == 1:
             q = q[None, :]
         mask = np.full(q.shape[0], bool(request.publish), bool)
+        kk = request.k or self.spec.k
+        bw = request.beam_width or self.spec.beam_width
+        recorder = TraceRecorder() if explain else None
+        timed = explain or self.registry.enabled
+        t0 = time.perf_counter() if timed else 0.0
         ids, dists, stats = self.backend.search(
-            q, k=request.k or self.spec.k,
-            beam_width=request.beam_width or self.spec.beam_width,
+            q, k=kk, beam_width=bw,
             filter_labels=request.filter_labels,
-            max_iters=request.max_iters, publish_mask=mask)
+            max_iters=request.max_iters, publish_mask=mask, trace=recorder)
+        total_ms = (time.perf_counter() - t0) * 1e3 if timed else 0.0
+        if self.registry.enabled:
+            self._record_search(q.shape[0], total_ms, stats, explain)
+        if explain:
+            return build_search_trace(
+                ids=np.asarray(ids), dists=np.asarray(dists), stats=stats,
+                tier=self.caps.tier, mode=self.backend.mode, k=kk,
+                beam_width=bw, filter_labels=request.filter_labels,
+                recorder=recorder, total_ms=total_ms)
         return SearchResult(ids=np.asarray(ids), dists=np.asarray(dists),
                             stats=stats)
 
@@ -152,10 +268,14 @@ class Database:
         if policy:
             maintainer = self.attach_maintainer(
                 policy if policy is not True else None)
-        return VectorSearchFrontend(
+        fe = VectorSearchFrontend(
             self.backend, k=k or self.spec.k, max_batch=max_batch,
             beam_width=beam_width or self.spec.beam_width,
-            maintainer=maintainer)
+            maintainer=maintainer, metrics=self.registry)
+        # the frontend's rolling window (QPS, occupancy, flush p99)
+        # rides into db.metrics() as a pull collector
+        self.registry.register_collector(fe.window.as_collector())
+        return fe
 
     def attach_maintainer(self, policy=None, tick_every: Optional[int] = None):
         """Create (and remember) a ``CatapultMaintainer`` over the
@@ -185,14 +305,24 @@ class Database:
         shapes = tuple(batch_shapes if batch_shapes is not None
                        else self.spec.warm_batch_shapes)
         dim = self.dim
+        breakdown: dict = {}
         t0 = time.perf_counter()
         for b in shapes:
+            tb = time.perf_counter()
             q = np.zeros((int(b), dim), np.float32)
             self.search(q, k=k, beam_width=beam_width, publish=False)
+            breakdown[int(b)] = (time.perf_counter() - tb) * 1e3
         ms = (time.perf_counter() - t0) * 1e3
         if shapes:
             self.reset_io()
         self.last_warm_ms = ms
+        # per-shape compile cost, so a first-query-latency regression
+        # names the offending batch shape instead of one opaque total
+        self.last_warm_breakdown = breakdown
+        if self.registry.enabled:
+            self.registry.gauge("catapultdb_warm_total_ms").set(ms)
+            for b, bms in breakdown.items():
+                self.registry.gauge(f"catapultdb_warm_ms_shape_{b}").set(bms)
         return ms
 
     # ---------------------------------------------------------------- state
@@ -236,11 +366,10 @@ class Database:
 
     @property
     def cache_stats(self):
-        """Aggregate ``CacheStats`` (None on the RAM tier)."""
-        if hasattr(self.backend, "cache_stats"):
-            return self.backend.cache_stats       # sharded aggregate
-        cache = getattr(self.backend, "cache", None)
-        return cache.stats if cache is not None else None
+        """Aggregate ``CacheStats`` — ONE shape on every tier.  The RAM
+        tier has no block cache, so its record is all-zero rather than
+        absent; scraping code never branches on tier."""
+        return self.backend.cache_stats
 
     def _need(self, cap: str, op: str) -> None:
         if not getattr(self.caps, cap):

@@ -107,6 +107,10 @@ class IndexSpec:
     adapt_tick_every: int = 32
     # jit pre-warm at create()/open(); () disables
     warm_batch_shapes: tuple = ()
+    # observability: False swaps the registry for a no-op one —
+    # db.metrics() then returns an empty snapshot and the search hot
+    # path pays a single branch (see repro.obs.metrics)
+    metrics: bool = True
 
     def __post_init__(self) -> None:
         if self.tier not in TIERS:

@@ -5,6 +5,14 @@ Pallas kernel (compiled on TPU, ``interpret=True`` elsewhere so CPU CI
 executes the same kernel bodies), and slices the result.  The pure-jnp
 oracles live in ``ref.py``; tests assert op == oracle across shape/dtype
 sweeps.
+
+Profiling: each public op wraps its jit'd dispatch in
+``repro.obs.annotate`` — with ``REPRO_PROFILE=1`` (or
+``repro.obs.enable_profiling()``) a ``jax.profiler`` capture shows
+named host spans per kernel instead of anonymous dispatches.  The
+annotation sits OUTSIDE the jit boundary (a host context manager can't
+live inside a traced function) and is one shared no-op when profiling
+is off.
 """
 from __future__ import annotations
 
@@ -18,6 +26,7 @@ from repro.kernels.gather_distance import gather_distance as _gather_distance
 from repro.kernels.l2_distance import l2_distance as _l2_distance
 from repro.kernels.lsh_hash import lsh_hash as _lsh_hash
 from repro.kernels.pq_adc import pq_adc as _pq_adc
+from repro.obs.profiler import annotate
 
 
 def _on_tpu() -> bool:
@@ -34,9 +43,8 @@ def _pad_rows(x: jax.Array, mult: int, value=0) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_c"))
-def l2_distance(queries: jax.Array, points: jax.Array, *,
-                block_q: int = 128, block_c: int = 128) -> jax.Array:
-    """(B, d) × (C, d) -> (B, C) squared L2, any B/C (padded internally)."""
+def _l2_distance_jit(queries: jax.Array, points: jax.Array, *,
+                     block_q: int = 128, block_c: int = 128) -> jax.Array:
     b, c = queries.shape[0], points.shape[0]
     bq, bc = min(block_q, max(b, 8)), min(block_c, max(c, 8))
     qp = _pad_rows(queries, bq)
@@ -46,17 +54,30 @@ def l2_distance(queries: jax.Array, points: jax.Array, *,
     return out[:b, :c]
 
 
+def l2_distance(queries: jax.Array, points: jax.Array, *,
+                block_q: int = 128, block_c: int = 128) -> jax.Array:
+    """(B, d) × (C, d) -> (B, C) squared L2, any B/C (padded internally)."""
+    with annotate("repro.kernels.l2_distance"):
+        return _l2_distance_jit(queries, points, block_q=block_q,
+                                block_c=block_c)
+
+
 @jax.jit
-def gather_distance(vectors: jax.Array, ids: jax.Array,
-                    query: jax.Array) -> jax.Array:
-    """(N, d), (M,) ids, (d,) -> (M,) distances; ids<0 -> +inf."""
+def _gather_distance_jit(vectors: jax.Array, ids: jax.Array,
+                         query: jax.Array) -> jax.Array:
     return _gather_distance(vectors, ids, query, interpret=not _on_tpu())
 
 
+def gather_distance(vectors: jax.Array, ids: jax.Array,
+                    query: jax.Array) -> jax.Array:
+    """(N, d), (M,) ids, (d,) -> (M,) distances; ids<0 -> +inf."""
+    with annotate("repro.kernels.gather_distance"):
+        return _gather_distance_jit(vectors, ids, query)
+
+
 @functools.partial(jax.jit, static_argnames=("block_q",))
-def lsh_hash(queries: jax.Array, hyperplanes: jax.Array, *,
-             block_q: int = 128) -> jax.Array:
-    """(B, d) × (L, d) -> (B,) int32 bucket codes, any B."""
+def _lsh_hash_jit(queries: jax.Array, hyperplanes: jax.Array, *,
+                  block_q: int = 128) -> jax.Array:
     b = queries.shape[0]
     bq = min(block_q, max(b, 8))
     qp = _pad_rows(queries, bq)
@@ -64,14 +85,27 @@ def lsh_hash(queries: jax.Array, hyperplanes: jax.Array, *,
     return out[:b]
 
 
+def lsh_hash(queries: jax.Array, hyperplanes: jax.Array, *,
+             block_q: int = 128) -> jax.Array:
+    """(B, d) × (L, d) -> (B,) int32 bucket codes, any B."""
+    with annotate("repro.kernels.lsh_hash"):
+        return _lsh_hash_jit(queries, hyperplanes, block_q=block_q)
+
+
 @functools.partial(jax.jit, static_argnames=("block_c",))
-def pq_adc(lut: jax.Array, codes: jax.Array, *, block_c: int = 128) -> jax.Array:
-    """(M, K) LUT × (C, M) codes -> (C,) ADC distances, any C."""
+def _pq_adc_jit(lut: jax.Array, codes: jax.Array, *,
+                block_c: int = 128) -> jax.Array:
     c = codes.shape[0]
     bc = min(block_c, max(c, 8))
     cp = _pad_rows(codes, bc)
     out = _pq_adc(lut, cp, block_c=bc, interpret=not _on_tpu())
     return out[:c]
+
+
+def pq_adc(lut: jax.Array, codes: jax.Array, *, block_c: int = 128) -> jax.Array:
+    """(M, K) LUT × (C, M) codes -> (C,) ADC distances, any C."""
+    with annotate("repro.kernels.pq_adc"):
+        return _pq_adc_jit(lut, codes, block_c=block_c)
 
 
 # re-export oracles for convenience in tests/benchmarks

@@ -1,0 +1,71 @@
+"""Opt-in ``jax.profiler`` annotation hooks for the Pallas kernels.
+
+When profiling is enabled (``REPRO_PROFILE=1`` in the environment, or
+``enable_profiling()`` at runtime), the public kernel entry points in
+``repro.kernels.ops`` wrap each dispatch in a
+``jax.profiler.TraceAnnotation`` — so a ``jax.profiler.trace(...)``
+capture (or a Perfetto/TensorBoard trace) shows named host spans for
+``repro.kernels.l2_distance`` / ``gather_distance`` / ``pq_adc`` /
+``lsh_hash`` instead of anonymous jit dispatches.
+
+Disabled (the default), ``annotate`` returns one shared no-op context
+manager: the hot path pays a single truthiness check and no allocation,
+and ``jax`` itself is only imported once profiling actually turns on —
+importing this module never drags the profiler machinery in.
+"""
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+
+
+class _NullContext:
+    """Shared reusable no-op context (``contextlib.nullcontext`` is not
+    reusable-by-sharing across threads pre-3.10 idiom; this is)."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CONTEXT = _NullContext()
+_enabled = os.environ.get("REPRO_PROFILE", "") not in ("", "0")
+
+
+def profiling_enabled() -> bool:
+    return _enabled
+
+
+def enable_profiling(flag: bool = True) -> None:
+    """Runtime switch (the env var ``REPRO_PROFILE=1`` sets the initial
+    state); affects every subsequent ``annotate`` call."""
+    global _enabled
+    _enabled = bool(flag)
+
+
+def annotate(name: str):
+    """Context manager: a ``jax.profiler.TraceAnnotation(name)`` when
+    profiling is on, the shared no-op otherwise."""
+    if not _enabled:
+        return _NULL_CONTEXT
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)
+
+
+@contextmanager
+def profile_trace(log_dir: str):
+    """Convenience wrapper for a whole capture: everything inside the
+    ``with`` block lands in a ``jax.profiler.trace`` at ``log_dir``
+    (viewable in TensorBoard/Perfetto), with kernel annotations active
+    for the duration."""
+    import jax.profiler
+    was = _enabled
+    enable_profiling(True)
+    try:
+        with jax.profiler.trace(log_dir):
+            yield
+    finally:
+        enable_profiling(was)

@@ -18,6 +18,7 @@ Two front doors live here:
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Optional
 
 import jax
@@ -27,6 +28,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.engine import SearchStats
 from repro.models import model as M
+from repro.obs import NULL_INSTRUMENT, RollingWindow
 
 
 class VectorSearchFrontend:
@@ -58,10 +60,19 @@ class VectorSearchFrontend:
     workload-adaptation loop into the serving path: every dispatched
     chunk is observed (real lanes only), and maintenance ticks ride
     the flush cadence.
+
+    Serving telemetry: ``window`` (a ``repro.obs.RollingWindow``) keeps
+    a bounded rolling readout — QPS, mean batch occupancy, flush
+    latency percentiles — recorded once per ``flush()``/bulk
+    ``search()`` call (one deque append; always on).  ``metrics`` (an
+    optional ``repro.obs.MetricsRegistry``) additionally publishes
+    flush counts and a full-history flush-latency histogram;
+    ``Database.serve()`` passes its own registry here.
     """
 
     def __init__(self, backend, *, k: int = 10, max_batch: int = 64,
-                 beam_width: Optional[int] = None, maintainer=None):
+                 beam_width: Optional[int] = None, maintainer=None,
+                 metrics=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.backend = backend
@@ -72,6 +83,11 @@ class VectorSearchFrontend:
         self._queue: list[tuple[int, np.ndarray, int, Optional[int]]] = []
         self._next_ticket = 0
         self.batches_dispatched = 0
+        self.window = RollingWindow()
+        self._m_flushes = (metrics.counter("catapultdb_serve_flushes_total")
+                           if metrics is not None else NULL_INSTRUMENT)
+        self._m_flush_ms = (metrics.histogram("catapultdb_serve_flush_ms")
+                            if metrics is not None else NULL_INSTRUMENT)
 
     def submit(self, query: np.ndarray, k: Optional[int] = None,
                beam_width: Optional[int] = None) -> int:
@@ -130,13 +146,24 @@ class VectorSearchFrontend:
         for entry in self._queue:
             groups.setdefault((entry[2], entry[3]), []).append(entry)
         self._queue = []
+        t0 = time.perf_counter()
+        served = 0
+        occupancy: list[float] = []
         for (k, beam), entries in groups.items():
             for lo in range(0, len(entries), self.max_batch):
                 chunk = entries[lo: lo + self.max_batch]
                 qs = np.stack([q for _, q, _, _ in chunk])
                 ids, dists, _ = self._dispatch_chunk(qs, k, beam)
+                served += len(chunk)
+                occupancy.append(len(chunk) / self.max_batch)
                 for row, (ticket, _, _, _) in enumerate(chunk):
                     out[ticket] = (ids[row], dists[row])
+        if served:
+            ms = (time.perf_counter() - t0) * 1e3
+            self.window.record_flush(
+                queries=served, occupancy=float(np.mean(occupancy)), ms=ms)
+            self._m_flushes.inc()
+            self._m_flush_ms.observe(ms)
         return out
 
     def search(self, queries: np.ndarray, k: Optional[int] = None,
@@ -150,12 +177,20 @@ class VectorSearchFrontend:
             return (np.empty((0, k), np.int32),
                     np.empty((0, k), np.float32), [])
         all_ids, all_d, all_stats = [], [], []
+        t0 = time.perf_counter()
+        occupancy: list[float] = []
         for lo in range(0, queries.shape[0], self.max_batch):
             ids, dists, stats = self._dispatch_chunk(
                 queries[lo: lo + self.max_batch], k, beam_width)
+            occupancy.append(ids.shape[0] / self.max_batch)
             all_ids.append(ids)
             all_d.append(dists)
             all_stats.append(stats)
+        ms = (time.perf_counter() - t0) * 1e3
+        self.window.record_flush(queries=int(queries.shape[0]),
+                                 occupancy=float(np.mean(occupancy)), ms=ms)
+        self._m_flushes.inc()
+        self._m_flush_ms.observe(ms)
         return (np.concatenate(all_ids), np.concatenate(all_d), all_stats)
 
 

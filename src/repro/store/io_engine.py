@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+from contextlib import nullcontext
 
 import jax.numpy as jnp
 import numpy as np
@@ -227,6 +228,11 @@ class DiskVectorSearchEngine(VectorSearchEngine):
     def cache(self) -> NodeCache:
         return self._cache
 
+    @property
+    def cache_stats(self):
+        """Uniform tier spelling of the node cache's counters."""
+        return self._cache.stats
+
     # ------------------------------------------------------------- device
     def _sync_device(self) -> None:
         self._adj = jnp.asarray(self._adj_np)
@@ -242,12 +248,18 @@ class DiskVectorSearchEngine(VectorSearchEngine):
                beam_width: int | None = None,
                filter_labels: np.ndarray | None = None,
                max_iters: int | None = None,
-               publish_mask: np.ndarray | None = None
+               publish_mask: np.ndarray | None = None,
+               trace=None
                ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
-        """Beam search on device, block fetch + rerank through the cache."""
+        """Beam search on device, block fetch + rerank through the cache.
+
+        ``trace`` (optional ``repro.obs.TraceRecorder``) times the
+        route/fetch/rerank stages for the ``explain`` search mode.
+        """
         q_np = np.ascontiguousarray(queries, np.float32)
         queries_j = jnp.asarray(q_np)
         b = queries_j.shape[0]
+        stage = trace.stage if trace is not None else (lambda _: nullcontext())
         # Wider default beam than the RAM engine (L ≈ 3k, not 2k): the
         # traversal is steered by PQ-approximate distances, and the slack
         # keeps true neighbors in the frontier despite quantization noise —
@@ -259,10 +271,11 @@ class DiskVectorSearchEngine(VectorSearchEngine):
                    if filter_labels is not None
                    else jnp.full((b,), -1, jnp.int32))
 
-        res, used, won = self._dispatch(queries_j, flabels, spec,
-                                        publish_mask=publish_mask)
-        beam_ids = np.asarray(res.ids)          # (B, l), tombstones masked
-        trace = np.asarray(res.trace)           # (B, max_iters), -1 padded
+        with stage("route"):
+            res, used, won = self._dispatch(queries_j, flabels, spec,
+                                            publish_mask=publish_mask)
+            beam_ids = np.asarray(res.ids)      # (B, l), tombstones masked
+            expansions = np.asarray(res.trace)  # (B, max_iters), -1 padded
         fl_np = (np.asarray(filter_labels, np.int32)
                  if filter_labels is not None else None)
 
@@ -275,7 +288,7 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         wants = []
         for lane in range(b):
             beam = beam_ids[lane]
-            expanded = trace[lane]
+            expanded = expansions[lane]
             want = np.concatenate([expanded[expanded >= 0],
                                    beam[beam >= 0]])
             wants.append(np.unique(want))
@@ -283,29 +296,32 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         # lanes that landed on the same hot blocks share a single load
         # (batched_reads counts the deduplicated I/O; a node's miss is
         # charged to the first lane that wanted it).
-        fetched = self._cache.fetch_batch(wants)
-        for lane, (want, (vecs, _, hits, misses)) in enumerate(
-                zip(wants, fetched)):
-            cache_hits[lane], block_reads[lane] = hits, misses
-            if want.size == 0:
-                continue
-            # Rerank EVERY fetched block, not just the beam: true neighbors
-            # that PQ noise evicted from the beam were still expanded, so
-            # their full-precision vectors are already in hand — free
-            # recall at zero extra I/O (DiskANN's visited-list rerank).
-            # Trace nodes bypassed the device-side result mask, so apply
-            # tombstone/filter constraints host-side.
-            keep = ~self._tomb_np[want]
-            if fl_np is not None and self._labels_np is not None \
-                    and fl_np[lane] >= 0:
-                keep &= self._labels_np[want] == fl_np[lane]
-            cand = want[keep]
-            if cand.size == 0:
-                continue
-            d = ((vecs[keep] - q_np[lane]) ** 2).sum(-1)
-            order = np.argsort(d, kind='stable')[:k]
-            out_ids[lane, : order.size] = cand[order]
-            out_d[lane, : order.size] = d[order]
+        with stage("fetch"):
+            fetched = self._cache.fetch_batch(wants)
+        with stage("rerank"):
+            for lane, (want, (vecs, _, hits, misses)) in enumerate(
+                    zip(wants, fetched)):
+                cache_hits[lane], block_reads[lane] = hits, misses
+                if want.size == 0:
+                    continue
+                # Rerank EVERY fetched block, not just the beam: true
+                # neighbors that PQ noise evicted from the beam were still
+                # expanded, so their full-precision vectors are already in
+                # hand — free recall at zero extra I/O (DiskANN's
+                # visited-list rerank).  Trace nodes bypassed the
+                # device-side result mask, so apply tombstone/filter
+                # constraints host-side.
+                keep = ~self._tomb_np[want]
+                if fl_np is not None and self._labels_np is not None \
+                        and fl_np[lane] >= 0:
+                    keep &= self._labels_np[want] == fl_np[lane]
+                cand = want[keep]
+                if cand.size == 0:
+                    continue
+                d = ((vecs[keep] - q_np[lane]) ** 2).sum(-1)
+                order = np.argsort(d, kind='stable')[:k]
+                out_ids[lane, : order.size] = cand[order]
+                out_d[lane, : order.size] = d[order]
 
         if self.mode == 'catapult' and self.catapult_active \
                 and self.pin_catapult_destinations:

@@ -46,6 +46,7 @@ import dataclasses
 import json
 import os
 from concurrent.futures import ThreadPoolExecutor
+from contextlib import nullcontext
 from typing import Optional
 
 import jax.numpy as jnp
@@ -215,7 +216,8 @@ class ShardedDiskVectorSearchEngine:
                beam_width: int | None = None,
                filter_labels: np.ndarray | None = None,
                max_iters: int | None = None,
-               publish_mask: np.ndarray | None = None
+               publish_mask: np.ndarray | None = None,
+               trace=None
                ) -> tuple[np.ndarray, np.ndarray, SearchStats]:
         """Scatter the batch to every shard, gather + merge global top-k.
 
@@ -233,27 +235,46 @@ class ShardedDiskVectorSearchEngine:
         out unchanged: every shard constrains its own traversal via its
         per-label entry points, and the merge keeps the global top-k of
         the predicate-satisfying union.
+
+        ``trace`` (optional ``repro.obs.TraceRecorder``): the whole
+        fan-out is timed as one ``scatter`` span and the merge as
+        ``merge``; each shard fills its own child recorder, and the
+        top-level ``route``/``fetch``/``rerank`` spans are the MAXIMUM
+        over shards — the critical path through the overlapped pool,
+        not a sum that double-counts concurrency.
         """
         if not self.shards:
             raise RuntimeError("build() or load() first")
+        stage = trace.stage if trace is not None else (lambda _: nullcontext())
         # mirror the single-store default (L ≈ 3k, io_engine.search),
         # then divide it over the scatter width
         beam = beam_width or max(3 * k, 24)
         per_shard_beam = max(k, -(-beam // self.n_shards))
+        kids = ([trace.child(f"shard_{s}") for s in range(self.n_shards)]
+                if trace is not None else [None] * self.n_shards)
 
-        def one(eng: DiskVectorSearchEngine):
+        def one(arg):
+            eng, kid = arg
             return eng.search(queries, k, beam_width=per_shard_beam,
                               filter_labels=filter_labels,
                               max_iters=max_iters,
-                              publish_mask=publish_mask)
+                              publish_mask=publish_mask, trace=kid)
 
-        results = list(self._executor().map(one, self.shards))
-        all_ids = np.stack([
-            np.asarray(rebase_ids(ids, int(self.offsets[s])))
-            for s, (ids, _, _) in enumerate(results)])        # (S, B, k)
-        all_d = np.stack([d for _, d, _ in results])           # (S, B, k)
-        merged_ids, merged_d = merge_topk(jnp.asarray(all_ids),
-                                          jnp.asarray(all_d), k)
+        with stage("scatter"):
+            results = list(self._executor().map(one, zip(self.shards, kids)))
+        with stage("merge"):
+            all_ids = np.stack([
+                np.asarray(rebase_ids(ids, int(self.offsets[s])))
+                for s, (ids, _, _) in enumerate(results)])        # (S, B, k)
+            all_d = np.stack([d for _, d, _ in results])           # (S, B, k)
+            merged_ids, merged_d = merge_topk(jnp.asarray(all_ids),
+                                              jnp.asarray(all_d), k)
+            merged_ids = np.asarray(merged_ids)
+            merged_d = np.asarray(merged_d)
+        if trace is not None:
+            for name in ("route", "fetch", "rerank"):
+                trace.add_stage(name, max(kid.stage_ms(name)
+                                          for kid in kids))
         stats = SearchStats(
             hops=np.sum([st.hops for _, _, st in results], axis=0),
             ndists=np.sum([st.ndists for _, _, st in results], axis=0),
@@ -263,7 +284,7 @@ class ShardedDiskVectorSearchEngine:
                                axis=0),
             cache_hits=np.sum([st.cache_hits for _, _, st in results],
                               axis=0))
-        return np.asarray(merged_ids), np.asarray(merged_d), stats
+        return merged_ids, merged_d, stats
 
     # ---------------------------------------------------------------- updates
     def _shard_of(self, global_ids: np.ndarray) -> np.ndarray:

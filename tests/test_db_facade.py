@@ -203,7 +203,10 @@ def test_caps_gate_operations_gracefully(data, tmp_path):
         ram.search(data[:4], k=2, filter_labels=np.zeros(4, np.int32))
     with pytest.raises(catapultdb.CapabilityError):
         ram.upsert(data[:2], labels=np.zeros(2, np.int32))
-    assert ram.cache_stats is None
+    # cache_stats is tier-uniform now: the RAM tier reports an all-zero
+    # record (no block cache) rather than None
+    assert ram.cache_stats.block_reads == 0
+    assert ram.cache_stats.hits == 0
     # and the mirror image: a FILTERED index refuses label-less upserts
     # (the engine would silently tag them label 0)
     filt = catapultdb.create(dataclasses.replace(SPEC, filters=True,
