@@ -13,7 +13,12 @@ SSD read count, modulo the node cache.  Two sections:
   biased workload: aggregate per-query block reads should stay
   flat-or-better vs the single store (the beam splits across shards)
   while recall holds and build memory scales with the largest shard
-  (``max_shard_rows``).
+  (``max_shard_rows``),
+* ``fig12_latency/*`` races the async pipelined I/O engine
+  (``IoSpec(pipeline=True)``) against the synchronous one on the
+  biased workload under a modeled SSD read latency — interleaved
+  repeats, p50 wall-clock per query; check_regression.py gates
+  pipelined p50 ≤ synchronous p50 with identical recall.
 
 Reported per row:
 
@@ -63,7 +68,7 @@ def stream_disk(db: catapultdb.Database, wl: Workload, *, k: int, name: str,
     q = wl.queries
     n = (q.shape[0] // BATCH) * BATCH
     db.search(q[:BATCH], k=k, beam_width=BEAM)    # jit warm-up
-    db.reset_io()                                 # ...but measure cold
+    db.io_stats(reset=True)                       # ...but measure cold
     all_ids, hops, reads, hits = [], [], [], []
     t0 = time.perf_counter()
     for lo in range(0, n, BATCH):
@@ -76,7 +81,7 @@ def stream_disk(db: catapultdb.Database, wl: Workload, *, k: int, name: str,
     ids = np.concatenate(all_ids)
     reads = np.concatenate(reads).astype(np.float64)
     hits = np.concatenate(hits).astype(np.float64)
-    cs = db.cache_stats
+    cs = db.io_stats()
     derived = (f"block_reads={reads.mean():.2f};"
                f"hit_rate={hits.sum() / max((hits + reads).sum(), 1):.3f};"
                f"recall={recall_at_k(ids, truth):.3f};"
@@ -112,6 +117,7 @@ def run(n=8_000, n_queries=2_048) -> list[str]:
                         name=f"fig12_disk/{wl.name}/{regime}/{mode}/k{K}"))
                     db.close()
     out.extend(run_sharded(n=n, n_queries=n_queries))
+    out.extend(run_latency(n=n, n_queries=n_queries))
     out.extend(run_facade_warmup())
     # fig2_disk/*: the mutable-tier story (insert/delete/consolidate
     # recall + I/O) rides in the same artifact so check_regression can
@@ -146,6 +152,106 @@ def run_sharded(n=8_000, n_queries=2_048) -> list[str]:
                 name=f"fig12_sharded/{wl.name}/S{s}/catapult/k{K}",
                 extra=f"shards={s};max_shard_rows={max_shard_rows}"))
             db.close()
+    return out
+
+
+class _ModeledSSDStore:
+    """Block-store wrapper charging a fixed device latency per read.
+
+    The CTPL files under bench live in the page cache, so a raw memmap
+    read costs ~1us and would hide the device the disk tier models —
+    both engines would measure pure host compute.  This wrapper makes
+    the read cost honest (one ``READ_LATENCY_S`` sleep per block — the
+    ~100us regime of a real NVMe random 4K read)
+    so the latency rows measure what the async engine actually claims:
+    reads moved OFF the critical path.  ``time.sleep`` releases the
+    GIL, so speculative background reads overlap exactly like real
+    in-flight SSD commands.  Both variants run behind the same wrapper
+    — the comparison stays apples-to-apples.
+    """
+
+    READ_LATENCY_S = 100e-6
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.header = inner.header
+
+    def read_block(self, node):
+        time.sleep(self.READ_LATENCY_S)
+        return self._inner.read_block(node)
+
+
+def run_latency(n=8_000, n_queries=2_048, repeats=5) -> list[str]:
+    """fig12_latency/* — the async engine's WALL-CLOCK claim, gated.
+
+    Same biased workload, same graph, same cache geometry, same modeled
+    SSD read latency; the only difference between the two rows is
+    ``IoSpec.pipeline``.  The synchronous engine pays every demand miss
+    on the critical path; the pipelined engine speculates the beam
+    frontier's neighborhoods into the cache between rounds, converting
+    next-round misses into ``prefetch_hits``.  Repeats are INTERLEAVED
+    (sync, pipelined, sync, ...) so host noise — thermals, page cache,
+    competing CI jobs — lands on both variants equally, and the gated
+    number is the p50 over repeats, which one noisy repeat cannot move.
+    check_regression.py fails the run when the pipelined p50 exceeds
+    the synchronous p50 (fresh-run structural gate, no baseline to go
+    stale behind).
+    """
+    wl = make_medrag_zipf(n=n, n_queries=n_queries)
+    q = wl.queries
+    n_q = (q.shape[0] // BATCH) * BATCH
+    truth = brute_force_knn(wl.corpus, q[:n_q], K)
+    frames = max(256, n // 16)
+    variants = (
+        ("sync", catapultdb.IoSpec()),
+        # queue_depth well under the frame budget: speculation may fill
+        # at most an eighth of the cache per round, so mispredictions
+        # can't churn out the resident hot set — and every wasted
+        # speculative read occupies a worker the demand path wants
+        ("pipelined", catapultdb.IoSpec(pipeline=True, workers=4,
+                                        prefetch_depth=4, queue_depth=32,
+                                        admission="locality")),
+    )
+    out = []
+    with tempfile.TemporaryDirectory() as td:
+        dbs, us_per_q, last = {}, {}, {}
+        for variant, io in variants:
+            db = make_db(wl, "catapult", tier="disk", seed=0,
+                         cache_frames=frames, io=io,
+                         store_path=os.path.join(td, f"{variant}.ctpl"))
+            db.backend.cache.store = _ModeledSSDStore(db.backend.cache.store)
+            db.search(q[:BATCH], k=K, beam_width=BEAM)    # jit warm-up
+            dbs[variant] = db
+            us_per_q[variant] = []
+        for _rep in range(repeats):
+            for variant, _io in variants:
+                db = dbs[variant]
+                db.io_stats(reset=True)     # identical cold start each rep
+                ids_rep = []
+                t0 = time.perf_counter()
+                for lo in range(0, n_q, BATCH):
+                    ids, _, _ = db.search(q[lo: lo + BATCH], k=K,
+                                          beam_width=BEAM)
+                    ids_rep.append(ids)
+                us_per_q[variant].append(
+                    (time.perf_counter() - t0) / n_q * 1e6)
+                last[variant] = (np.concatenate(ids_rep), db.io_stats())
+        for variant, _io in variants:
+            ids, st = last[variant]
+            p50 = float(np.median(us_per_q[variant]))
+            total = st.hits + st.misses
+            out.append(
+                f"fig12_latency/{wl.name}/{variant}/k{K},{p50:.1f},"
+                f"p50_us={p50:.1f};"
+                f"mean_us={np.mean(us_per_q[variant]):.1f};"
+                f"recall={recall_at_k(ids, truth):.3f};"
+                f"block_reads={st.block_reads / max(n_q, 1) * 1.0:.2f};"
+                f"hit_rate={st.hits / max(total, 1):.3f};"
+                f"prefetch_issued={st.prefetch_issued};"
+                f"prefetch_hits={st.prefetch_hits};"
+                f"prefetch_wasted={st.prefetch_wasted};"
+                f"prefetch_cancelled={st.prefetch_cancelled}")
+            dbs[variant].close()
     return out
 
 

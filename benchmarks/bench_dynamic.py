@@ -102,7 +102,7 @@ def run_disk(n=4_000, n_queries=1_024, k=8, insert_batch=200,
                          cache_frames=max(256, n // 16),
                          store_path=os.path.join(td, "dyn.ctpl"))
             db.search(q, k=k, beam_width=2 * k)       # jit warm-up
-            db.reset_io()
+            db.io_stats(reset=True)
 
             def phase():
                 t0 = time.perf_counter()

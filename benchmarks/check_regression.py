@@ -38,6 +38,12 @@ Fresh-run structural checks (independent of the baseline, so a
 regression can't hide behind a stale baseline file):
 
 * fig12_sharded: S=4 recall within ``SHARD_PARITY_POINTS`` of S=1,
+* fig12_latency: the async I/O engine's wall-clock claim — the
+  pipelined p50 must not exceed the synchronous p50 on the biased
+  workload (same graph, same cache, same modeled SSD latency; the
+  pipeline's speculation must BUY latency, not just shuffle counters),
+  and the two rows' recall must be identical (speculation must never
+  change results),
 * fig7_adapt/sudden: the adaptive system recovers within budget AND
   the frozen-catapult baseline does NOT — if frozen recovers, the
   shift scenario lost its teeth and the adaptation claim is vacuous.
@@ -208,6 +214,30 @@ def check(current: dict, baseline: dict) -> list[str]:
                 f"S=1 recall {s1[0]['recall']:.3f} - {SHARD_PARITY_POINTS}")
     elif s_rows:
         failures.append("fig12_sharded rows present but S1/S4 pair missing")
+
+    # fig12_latency acceptance, fresh run: the pipelined engine must beat
+    # (or tie) the synchronous one on wall-clock p50, with identical
+    # recall — the async I/O engine's whole claim, in one comparison
+    lat_rows = {name: m for name, m in cur.items()
+                if name.startswith("fig12_latency/")}
+    lat_sync = [m for name, m in lat_rows.items() if "/sync/" in name]
+    lat_pipe = [m for name, m in lat_rows.items() if "/pipelined/" in name]
+    if lat_sync and lat_pipe:
+        s_p50, p_p50 = lat_sync[0]["p50_us"], lat_pipe[0]["p50_us"]
+        if p_p50 > s_p50:
+            failures.append(
+                f"io pipeline: pipelined p50 {p_p50:.1f}us/query > "
+                f"synchronous p50 {s_p50:.1f}us/query — speculation is "
+                f"not buying wall-clock latency")
+        if abs(lat_pipe[0]["recall"] - lat_sync[0]["recall"]) > 1e-9:
+            failures.append(
+                f"io pipeline: pipelined recall "
+                f"{lat_pipe[0]['recall']:.3f} != synchronous "
+                f"{lat_sync[0]['recall']:.3f} — speculation changed "
+                f"search results")
+    elif lat_rows:
+        failures.append(
+            "fig12_latency rows present but sync/pipelined pair missing")
 
     # fig7_adapt acceptance, fresh run: adaptive recovers, frozen does not
     adaptive = cur.get("fig7_adapt/sudden/adaptive")

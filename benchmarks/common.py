@@ -62,7 +62,7 @@ def shared_graph(wl: Workload):
 def make_db(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
             seed=0, tier: str = "ram", store_path: str | None = None,
             cache_frames: int = 2048, n_shards: int = 2,
-            spare_capacity: int = 0,
+            spare_capacity: int = 0, io: catapultdb.IoSpec | None = None,
             warm_batch_shapes: tuple = ()) -> catapultdb.Database:
     """The one database factory every benchmark uses: same workload,
     any tier, constructed only through ``repro.db.create``.  Unlabeled
@@ -73,7 +73,7 @@ def make_db(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
         bucket_capacity=bucket_capacity, seed=seed,
         cache_frames=cache_frames, n_shards=n_shards,
         spare_capacity=spare_capacity, filters=wl.labels is not None,
-        warm_batch_shapes=warm_batch_shapes)
+        io=io, warm_batch_shapes=warm_batch_shapes)
     if wl.labels is not None:
         return catapultdb.create(spec, wl.corpus, labels=wl.labels)
     prebuilt = shared_graph(wl) if tier != "sharded" else None

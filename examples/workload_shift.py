@@ -44,7 +44,7 @@ with tempfile.TemporaryDirectory() as td:
         fe.flush()                       # ONE batched backend search
         if (lo // BATCH) % 4 == 3:
             s = maintainer.snapshot()
-            cs = db.cache_stats
+            cs = db.io_stats()
             phase = "pre" if lo + BATCH <= shift else "post"
             print(f"{lo + BATCH:>8} {phase:>6} {s['win_ewma']:>6.3f} "
                   f"{cs.block_reads / (lo + BATCH):>8.2f} "

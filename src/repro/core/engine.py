@@ -296,6 +296,13 @@ class VectorSearchEngine:
         return CacheStats(hits=0, misses=0, block_reads=0,
                           prefetch_batches=0, batched_reads=0)
 
+    def io_stats(self, reset: bool = False):
+        """Tier-uniform typed I/O record; the RAM engine does no block
+        I/O, so the record is all-zero (and ``reset`` a no-op) rather
+        than the method being absent."""
+        from repro.store.cache import ZERO_IO_STATS   # lazy: import cycle
+        return ZERO_IO_STATS
+
     # ---------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,
                beam_width: int | None = None,

@@ -31,11 +31,13 @@ regenerate after an intentional change with
 """
 from repro.db.database import Database
 from repro.db.factory import create, open, sniff
-from repro.db.spec import (CapabilityError, Caps, IndexSpec, SearchRequest,
-                           SearchResult)
+from repro.db.spec import (CapabilityError, Caps, IndexSpec, IoSpec,
+                           SearchRequest, SearchResult)
 from repro.obs import SearchTrace
+from repro.store.cache import IoStats
 
 __all__ = [
-    "CapabilityError", "Caps", "Database", "IndexSpec", "SearchRequest",
-    "SearchResult", "SearchTrace", "create", "open", "sniff",
+    "CapabilityError", "Caps", "Database", "IndexSpec", "IoSpec", "IoStats",
+    "SearchRequest", "SearchResult", "SearchTrace", "create", "open",
+    "sniff",
 ]

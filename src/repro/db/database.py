@@ -28,6 +28,7 @@ readouts — a scrape of the aggregates, or one query's full trace.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Optional
 
 import numpy as np
@@ -73,15 +74,25 @@ class Database:
         if not reg.enabled:
             return
 
-        def cache_collector() -> dict:
-            st = self.backend.cache_stats
+        def io_collector() -> dict:
+            st = self.backend.io_stats()
             return {"catapultdb_cache_hits": float(st.hits),
                     "catapultdb_cache_misses": float(st.misses),
                     "catapultdb_cache_block_reads": float(st.block_reads),
                     "catapultdb_cache_prefetch_batches":
                         float(st.prefetch_batches),
                     "catapultdb_cache_batched_reads":
-                        float(st.batched_reads)}
+                        float(st.batched_reads),
+                    "catapultdb_io_prefetch_issued":
+                        float(st.prefetch_issued),
+                    "catapultdb_io_prefetch_completed":
+                        float(st.prefetch_completed),
+                    "catapultdb_io_prefetch_hits":
+                        float(st.prefetch_hits),
+                    "catapultdb_io_prefetch_wasted":
+                        float(st.prefetch_wasted),
+                    "catapultdb_io_prefetch_cancelled":
+                        float(st.prefetch_cancelled)}
 
         def adapt_collector() -> dict:
             m = self.maintainer       # read dynamically: attach_maintainer
@@ -92,7 +103,7 @@ class Database:
                     if isinstance(v, (bool, int, float, np.bool_,
                                       np.integer, np.floating))}
 
-        reg.register_collector(cache_collector)
+        reg.register_collector(io_collector)
         reg.register_collector(adapt_collector)
 
     def _record_search(self, batch: int, ms: float, stats,
@@ -314,7 +325,7 @@ class Database:
             breakdown[int(b)] = (time.perf_counter() - tb) * 1e3
         ms = (time.perf_counter() - t0) * 1e3
         if shapes:
-            self.reset_io()
+            self.io_stats(reset=True)
         self.last_warm_ms = ms
         # per-shape compile cost, so a first-query-latency regression
         # names the offending batch shape instead of one opaque total
@@ -358,17 +369,39 @@ class Database:
         return self.backend._tomb_np[: self.backend.n_active]
 
     # ---------------------------------------------------------------- I/O
+    def io_stats(self, reset: bool = False):
+        """The typed I/O record (``repro.store.cache.IoStats``) — ONE
+        shape on every tier.  Cache counters (hits/misses/block_reads/
+        prefetch_batches/batched_reads) plus the async pipeline's
+        speculation counters (issued/completed/hits/wasted/cancelled);
+        the RAM tier does no block I/O, so its record is all-zero rather
+        than absent — scraping code never branches on tier.  The sharded
+        tier sums each shard's counters exactly once.
+
+        ``reset=True`` returns the snapshot and then cold-starts the I/O
+        path — counters AND cache dropped, structural pins (medoid,
+        label entries) re-established.  Benchmark hygiene in one call:
+
+            db.io_stats(reset=True)      # discard warmup traffic
+            run_workload(db)
+            st = db.io_stats()           # exactly the workload's I/O
+        """
+        return self.backend.io_stats(reset=reset)
+
     def reset_io(self) -> None:
-        """Cold-start I/O counters + cache (no-op on the RAM tier)."""
-        reset = getattr(self.backend, "reset_io", None)
-        if reset is not None:
-            reset()
+        """Deprecated: use ``io_stats(reset=True)`` (same cold-start,
+        with the discarded counters handed back)."""
+        warnings.warn("Database.reset_io() is deprecated; use "
+                      "db.io_stats(reset=True)", DeprecationWarning,
+                      stacklevel=2)
+        self.backend.io_stats(reset=True)
 
     @property
     def cache_stats(self):
-        """Aggregate ``CacheStats`` — ONE shape on every tier.  The RAM
-        tier has no block cache, so its record is all-zero rather than
-        absent; scraping code never branches on tier."""
+        """Deprecated: use ``io_stats()`` (same leading five fields,
+        plus the async pipeline's speculation counters)."""
+        warnings.warn("Database.cache_stats is deprecated; use "
+                      "db.io_stats()", DeprecationWarning, stacklevel=2)
         return self.backend.cache_stats
 
     def _need(self, cap: str, op: str) -> None:

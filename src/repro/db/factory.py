@@ -98,7 +98,8 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             mode=spec.mode, vamana=spec.vamana(), n_bits=spec.n_bits,
             bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
             seed=spec.seed, capacity=n + spec.spare_capacity,
-            cache_frames=spec.cache_frames, store_path=spec.path)
+            cache_frames=spec.cache_frames, io=spec.io,
+            store_path=spec.path)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   prebuilt=prebuilt)
     else:
@@ -107,7 +108,7 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             store_dir=spec.path, n_shards=spec.n_shards, mode=spec.mode,
             vamana=spec.vamana(), n_bits=spec.n_bits,
             bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
-            seed=spec.seed, cache_frames=spec.cache_frames)
+            seed=spec.seed, cache_frames=spec.cache_frames, io=spec.io)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   spare_capacity=spec.spare_capacity)
 
@@ -132,7 +133,11 @@ def open(path: str, *, mode: Optional[str] = None,
     """
     tier, _version = sniff(path)
     runtime = spec or IndexSpec()
-    kwargs = dict(vamana=runtime.vamana(), cache_frames=runtime.cache_frames)
+    # io=None means "no preference" — the engine then resumes the
+    # persisted IoSpec (.io.json sidecar / manifest "io"); an explicit
+    # runtime.io overrides it
+    kwargs = dict(vamana=runtime.vamana(), cache_frames=runtime.cache_frames,
+                  io=runtime.io)
     if tier == "sharded":
         from repro.store.sharded_store import ShardedDiskVectorSearchEngine
         eng = ShardedDiskVectorSearchEngine.load(path, mode=mode, **kwargs)
@@ -151,7 +156,8 @@ def open(path: str, *, mode: Optional[str] = None,
         pq=getattr(eng, "pq_subspaces", runtime.pq),
         filters=bool(eng.filtered), n_bits=eng.n_bits,
         bucket_capacity=eng.bucket_capacity, seed=eng.seed,
-        n_shards=getattr(eng, "n_shards", runtime.n_shards))
+        n_shards=getattr(eng, "n_shards", runtime.n_shards),
+        io=getattr(eng, "io", runtime.io))
     db = Database(eng, opened, _caps(tier, eng.filtered))
     db.warm()
     return db

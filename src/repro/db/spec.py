@@ -39,6 +39,67 @@ class CapabilityError(RuntimeError):
     """Operation not supported by this tier (see ``Database.caps``)."""
 
 
+ADMISSION_POLICIES = ("clock", "locality")
+
+
+@dataclasses.dataclass(frozen=True)
+class IoSpec:
+    """Disk-tier I/O engine configuration (``IndexSpec.io``).
+
+    ``pipeline=False`` (the default) is the synchronous engine: demand
+    fetches on the search path, nothing speculative — bit-identical to
+    the pre-pipeline behaviour, counters included.  ``pipeline=True``
+    turns on the async submission/completion engine
+    (``repro.store.pipeline``): ``workers`` reader threads overlap
+    speculative block reads with rerank/route compute, prefetching the
+    beam frontier's neighborhoods (the adjacency of each lane's top
+    ``prefetch_depth`` beam nodes) under a bounded ``queue_depth`` of
+    outstanding reads, with in-flight dedup and cancellation of
+    mispredicted prefetches.
+
+    ``admission`` picks the cache-admission policy: ``'clock'`` is pure
+    recency; ``'locality'`` is the GoVector-style I/O-aware policy —
+    frequently re-demanded nodes earn extra CLOCK lives and speculative
+    blocks enter unreferenced, so a misprediction never flushes the
+    resident hot set.  Both compose with catapult-destination pinning.
+
+    The spec persists next to the index (single store: ``<store>.io.json``
+    sidecar; sharded: the manifest's ``io`` entry), so a plain
+    ``open(path)`` resumes the engine the index was tuned with; an
+    explicit ``spec.io`` at ``open()`` overrides the persisted one.
+
+    Search results are unaffected either way: ids/dists are bit-identical
+    with the pipeline on or off — only wall-clock and I/O accounting move.
+    """
+    pipeline: bool = False
+    workers: int = 2
+    prefetch_depth: int = 4      # beam-frontier nodes speculated per lane
+    queue_depth: int = 256       # max outstanding speculative reads
+    admission: str = "clock"
+
+    def __post_init__(self) -> None:
+        if self.workers < 1:
+            raise ValueError(f"io.workers must be >= 1, got {self.workers}")
+        if self.prefetch_depth < 1:
+            raise ValueError(f"io.prefetch_depth must be >= 1, "
+                             f"got {self.prefetch_depth}")
+        if self.queue_depth < 1:
+            raise ValueError(f"io.queue_depth must be >= 1, "
+                             f"got {self.queue_depth}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"io.admission must be one of "
+                             f"{ADMISSION_POLICIES}, "
+                             f"got {self.admission!r}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IoSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
 class Caps(NamedTuple):
     """What this database can do — probe instead of type-sniffing."""
     tier: str            # 'ram' | 'disk' | 'sharded'
@@ -69,7 +130,10 @@ class IndexSpec:
     Tier selection:
       ``tier='ram'`` needs no path; 'disk' and 'sharded' require
       ``path`` (a .ctpl file / a manifest directory).  ``n_shards``
-      only applies to the sharded tier.
+      only applies to the sharded tier.  ``io`` configures the disk
+      tiers' I/O engine (async pipeline, prefetch, cache admission —
+      see ``IoSpec``); ``None`` selects the synchronous default and
+      ``open()`` resumes whatever the index persisted.
 
     Serving defaults + adaptation:
       ``k``/``beam_width`` are the DEFAULTS a request can override
@@ -99,6 +163,9 @@ class IndexSpec:
     # disk tiers
     cache_frames: int = 2048
     n_shards: int = 2
+    # disk I/O engine (None = the synchronous default, IoSpec());
+    # persisted with the index and resumed by open()
+    io: Optional[IoSpec] = None
     # serving defaults (overridable per SearchRequest)
     k: int = 10
     beam_width: Optional[int] = None
@@ -128,6 +195,9 @@ class IndexSpec:
             raise ValueError(f"need >= 1 shard, got {self.n_shards}")
         if self.adapt is not None and self.mode != "catapult":
             raise ValueError("adapt policy needs mode='catapult'")
+        if self.io is not None and not isinstance(self.io, IoSpec):
+            raise ValueError(f"io must be an IoSpec (or None for the "
+                             f"synchronous default), got {type(self.io)}")
 
     def vamana(self) -> VamanaParams:
         return VamanaParams(max_degree=self.degree,

@@ -34,8 +34,10 @@ global counters for the fig12_disk benchmark.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 from contextlib import nullcontext
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,12 +47,27 @@ from repro.core import buckets as bk
 from repro.core import catapult as cat
 from repro.core.beam_search import SearchSpec
 from repro.core.engine import DiskStore, SearchStats, VectorSearchEngine
-from repro.store.cache import NodeCache
+from repro.db.spec import IoSpec
+from repro.store.cache import IoStats, NodeCache
 from repro.store.layout import open_store
+from repro.store.pipeline import IoPipeline
 
 
 def _adapt_sidecar(store_path: str) -> str:
     return store_path + ".adapt.npz"
+
+
+def _io_sidecar(store_path: str) -> str:
+    return store_path + ".io.json"
+
+
+def read_io_sidecar(store_path: str) -> Optional[IoSpec]:
+    """The persisted ``IoSpec`` next to a CTPL file, or None."""
+    path = _io_sidecar(store_path)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return IoSpec.from_dict(json.load(f))
 
 
 def default_pq_subspaces(dim: int) -> int:
@@ -68,6 +85,9 @@ class DiskVectorSearchEngine(VectorSearchEngine):
     store_path: str = 'index.ctpl'
     cache_frames: int = 2048
     pin_catapult_destinations: bool = True
+    # I/O engine config (None = the synchronous IoSpec() default; load()
+    # resumes the persisted sidecar when the caller expressed no choice)
+    io: Optional[IoSpec] = None
 
     def __post_init__(self) -> None:
         if self.mode not in ('catapult', 'diskann'):
@@ -104,6 +124,7 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         if os.path.exists(_adapt_sidecar(self.store_path)):
             os.remove(_adapt_sidecar(self.store_path))
         self._open_cache()
+        self._write_io_sidecar()
         return self
 
     @classmethod
@@ -144,6 +165,10 @@ class DiskVectorSearchEngine(VectorSearchEngine):
                 'labeled store without a label-entry table (pre-v3 file): '
                 'rebuild, or re-save with a v3 writer')
         eng = cls(mode=mode, store_path=store_path, **engine_kwargs)
+        if eng.io is None:
+            # no caller preference: resume the I/O engine the index was
+            # tuned with (the .io.json sidecar save()/build() wrote)
+            eng.io = read_io_sidecar(store_path)
         codebook = bs.read_pq()
         if codebook is not None:
             eng.pq_subspaces = codebook.shape[0]
@@ -208,9 +233,26 @@ class DiskVectorSearchEngine(VectorSearchEngine):
                                 degree=degree, has_labels=self.filtered)
 
     def _open_cache(self) -> None:
+        self.io = self.io or IoSpec()
         self._cache = NodeCache(self.store.block_store,
-                                capacity=self.cache_frames)
+                                capacity=self.cache_frames,
+                                admission=self.io.admission)
+        self._pipeline = (IoPipeline(self._cache, workers=self.io.workers,
+                                     queue_depth=self.io.queue_depth)
+                          if self.io.pipeline else None)
         self._repin()
+
+    def _write_io_sidecar(self) -> None:
+        tmp = _io_sidecar(self.store_path) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.io.to_dict(), f, indent=1)
+        os.replace(tmp, _io_sidecar(self.store_path))
+
+    def _quiesce_io(self) -> None:
+        """Wait out every speculative read in flight — graph surgery is
+        about to rewrite the blocks those reads would install."""
+        if self._pipeline is not None:
+            self._pipeline.drain()
 
     def _repin(self) -> None:
         self._cache.pin(self.medoid)
@@ -220,13 +262,29 @@ class DiskVectorSearchEngine(VectorSearchEngine):
     def reset_io(self) -> None:
         """Cold-start the I/O path (benchmark hygiene): drop every cached
         frame and counter, then re-establish the structural pins."""
+        self._quiesce_io()
         self._cache.invalidate()
         self._cache.reset_counters()
         self._repin()
 
+    def io_stats(self, reset: bool = False) -> IoStats:
+        """The tier-uniform typed I/O record (``db.io_stats()``).
+
+        ``reset=True`` returns the snapshot and then cold-starts the
+        I/O path (counters AND cache, pins re-established) — the old
+        ``reset_io()`` semantics with the counters handed back."""
+        snap = self._cache.io_stats
+        if reset:
+            self.reset_io()
+        return snap
+
     @property
     def cache(self) -> NodeCache:
         return self._cache
+
+    @property
+    def pipeline(self) -> Optional[IoPipeline]:
+        return self._pipeline
 
     @property
     def cache_stats(self):
@@ -296,8 +354,24 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         # lanes that landed on the same hot blocks share a single load
         # (batched_reads counts the deduplicated I/O; a node's miss is
         # charged to the first lane that wanted it).
+        if self._pipeline is not None:
+            # new beam round: last round's still-queued speculation is a
+            # misprediction now — cancel it before it costs a read
+            self._pipeline.advance()
+            # submission phase, demand half: every block this round's
+            # rerank needs, deduplicated across lanes, goes to the
+            # worker pool NOW — fetch_batch below then COMPLETES against
+            # in-flight reads instead of paying each miss serially
+            self._pipeline.submit(np.unique(np.concatenate(wants)))
         with stage("fetch"):
             fetched = self._cache.fetch_batch(wants)
+        if self._pipeline is not None:
+            # submission phase: queue the beam frontier's neighborhoods
+            # before reranking, so the speculative reads complete in the
+            # background while the host computes full-precision distances
+            # (and while the device routes the next batch)
+            with stage("speculate"):
+                self._speculate(beam_ids, wants, fetched)
         with stage("rerank"):
             for lane, (want, (vecs, _, hits, misses)) in enumerate(
                     zip(wants, fetched)):
@@ -336,6 +410,49 @@ class DiskVectorSearchEngine(VectorSearchEngine):
                             block_reads=block_reads, cache_hits=cache_hits)
         return out_ids, out_d, stats
 
+    def _speculate(self, beam_ids: np.ndarray, wants, fetched) -> None:
+        """Queue next round's likely blocks: the neighborhoods of each
+        lane's beam frontier.
+
+        Under query locality (the paper's premise) round N+1's queries
+        land where round N's winners live, and the winners' neighbor
+        lists are already in hand from the demand fetch — so the
+        speculation costs zero extra critical-path I/O to compute and
+        converts next round's misses into ``prefetch_hits``.
+        """
+        depth = self.io.prefetch_depth
+        neigh = []
+        for lane, want in enumerate(wants):
+            if want.size == 0:
+                continue
+            heads = beam_ids[lane][:depth]
+            heads = heads[heads >= 0]
+            if heads.size == 0:
+                continue
+            # want is sorted-unique and contains the beam, so the heads'
+            # adjacency rows are in this lane's fetched block set
+            pos = np.searchsorted(want, heads)
+            ok = pos < want.size
+            pos = pos[ok]
+            pos = pos[want[pos] == heads[ok]]
+            if pos.size:
+                neigh.append(fetched[lane][1][pos].ravel())
+        if not neigh:
+            return
+        cand, freq = np.unique(np.concatenate(neigh), return_counts=True)
+        ok = (cand >= 0) & ~self._tomb_np[np.maximum(cand, 0)]
+        cand, freq = cand[ok], freq[ok]      # dead block = wasted read
+        # the queue budget forces a choice, so spend it on the blocks
+        # MANY lanes' frontiers point at: under query locality the
+        # shared neighborhoods are exactly where the next batch lands
+        # (a lane-order truncation keeps near-random singletons instead)
+        budget = 2 * self.io.queue_depth
+        if cand.size > budget:
+            top = np.argpartition(freq, cand.size - budget)[-budget:]
+            cand = cand[top]
+        if cand.size:
+            self._pipeline.speculate(cand)
+
     def search_two_phase(self, queries: np.ndarray, k: int,
                          beam_width: int | None = None,
                          phase1_iters: int = 8):
@@ -361,6 +478,7 @@ class DiskVectorSearchEngine(VectorSearchEngine):
             bs.write_tombstones(self._tomb_np)
         # insert surgery rewrites back-edges of existing nodes — cached
         # frames may hold stale adjacency; drop them and re-pin
+        self._quiesce_io()
         self._cache.invalidate()
         self._repin()
         return ids
@@ -387,6 +505,7 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         with vector zeroed and label cleared — their PQ codes are
         unreachable garbage, never consulted again.
         """
+        self._quiesce_io()
         repaired = super().consolidate()
         bs = self.store.block_store
         deleted = self._tomb_np[: self.n_active].nonzero()[0]
@@ -409,7 +528,10 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         sharded tier does.  ``include_adapt=False`` is the sharded
         facade's spelling: its ``.buckets.npz`` sidecars + manifest own
         the adapt state there, and a second copy per shard could
-        silently diverge."""
+        silently diverge.  The I/O engine config rides along in the
+        ``<store>.io.json`` sidecar either way, so ``open()`` resumes
+        the pipeline/admission setup the index was tuned with."""
+        self._write_io_sidecar()
         bs = self.store.block_store
         bs.flush(n_active=self.n_active, medoid=self.medoid,
                  has_labels=self.filtered)
@@ -438,4 +560,6 @@ class DiskVectorSearchEngine(VectorSearchEngine):
             os.remove(_adapt_sidecar(self.store_path))
 
     def close(self) -> None:
+        if self._pipeline is not None:
+            self._pipeline.close()
         self.store.close()

@@ -58,7 +58,8 @@ from repro.core import catapult as cat
 from repro.core.engine import SearchStats
 from repro.core.sharded import merge_topk, rebase_ids
 from repro.core.vamana import VamanaParams
-from repro.store.cache import CacheStats
+from repro.db.spec import IoSpec
+from repro.store.cache import CacheStats, IoStats
 from repro.store.io_engine import DiskVectorSearchEngine
 
 MANIFEST_NAME = "manifest.json"
@@ -89,6 +90,9 @@ class ShardedDiskVectorSearchEngine:
     cache_frames: int = 2048          # frames PER SHARD
     pin_catapult_destinations: bool = True
     max_workers: Optional[int] = None  # shard-fetch overlap; default = S
+    # I/O engine config, applied PER SHARD (each shard engine owns its
+    # cache + pipeline); None = manifest value on load / sync default
+    io: Optional[IoSpec] = None
 
     # populated by build()/load()
     shards: list = dataclasses.field(default_factory=list)
@@ -129,6 +133,9 @@ class ShardedDiskVectorSearchEngine:
         if self.filtered:
             assert n_labels is not None
             self.n_labels = int(n_labels)
+        # resolve once so the manifest and every shard agree on the
+        # I/O engine config (each shard gets its own cache + pipeline)
+        self.io = self.io or IoSpec()
         os.makedirs(self.store_dir, exist_ok=True)
         bounds = np.linspace(0, n, self.n_shards + 1).astype(np.int64)
         # every requested spare slot materializes: the first
@@ -149,6 +156,7 @@ class ShardedDiskVectorSearchEngine:
                 pq_subspaces=self.pq_subspaces, seed=self.seed + s,
                 cache_frames=self.cache_frames, capacity=cap,
                 pin_catapult_destinations=self.pin_catapult_destinations,
+                io=self.io,
                 store_path=os.path.join(self.store_dir, _shard_file(s)))
             if self.filtered:
                 eng.build(vectors[lo:hi], labels=labels[lo:hi],
@@ -172,6 +180,10 @@ class ShardedDiskVectorSearchEngine:
             "bucket_capacity": self.bucket_capacity,
             "filtered": self.filtered,
             "n_labels": self.n_labels,
+            # the sharded tier's IoSpec home is the manifest (the
+            # per-shard .io.json sidecars exist but the manifest wins),
+            # so open() resumes the pipeline/admission setup tier-wide
+            "io": (self.io or IoSpec()).to_dict(),
             "offsets": [int(o) for o in self.offsets],
             "shards": [{
                 "file": _shard_file(s),
@@ -272,7 +284,7 @@ class ShardedDiskVectorSearchEngine:
             merged_ids = np.asarray(merged_ids)
             merged_d = np.asarray(merged_d)
         if trace is not None:
-            for name in ("route", "fetch", "rerank"):
+            for name in ("route", "fetch", "speculate", "rerank"):
                 trace.add_stage(name, max(kid.stage_ms(name)
                                           for kid in kids))
         stats = SearchStats(
@@ -343,6 +355,14 @@ class ShardedDiskVectorSearchEngine:
         per = [eng.cache.stats for eng in self.shards]
         return CacheStats(*[sum(s[i] for s in per) for i in range(5)])
 
+    def io_stats(self, reset: bool = False) -> IoStats:
+        """Tier-wide I/O record: each shard's counters summed exactly
+        once (every block read/hit/prefetch belongs to one shard's cache,
+        so the sum never double-counts the overlapped fan-out)."""
+        per = [eng.io_stats(reset=reset) for eng in self.shards]
+        return IoStats(*[sum(s[i] for s in per)
+                         for i in range(len(IoStats._fields))])
+
     def reset_io(self) -> None:
         for eng in self.shards:
             eng.reset_io()
@@ -399,6 +419,12 @@ class ShardedDiskVectorSearchEngine:
         self.dim = int(manifest["dim"])
         self.filtered = bool(manifest.get("filtered", False))
         self.n_labels = int(manifest.get("n_labels", 0))
+        if self.io is None and "io" in manifest:
+            # no caller preference: resume the I/O engine config the
+            # index was tuned with (pre-io manifests fall through to
+            # the synchronous default below)
+            self.io = IoSpec.from_dict(manifest["io"])
+        self.io = self.io or IoSpec()
         self.shards = []
         for s, meta in enumerate(manifest["shards"]):
             eng = DiskVectorSearchEngine.load(
@@ -406,7 +432,8 @@ class ShardedDiskVectorSearchEngine:
                 vamana=dataclasses.replace(self.vamana, seed=self.seed + s),
                 n_bits=self.n_bits, bucket_capacity=self.bucket_capacity,
                 seed=self.seed + s, cache_frames=self.cache_frames,
-                pin_catapult_destinations=self.pin_catapult_destinations)
+                pin_catapult_destinations=self.pin_catapult_destinations,
+                io=self.io)
             bpath = os.path.join(store_dir, _bucket_file(s))
             if mode == "catapult" and os.path.exists(bpath):
                 with np.load(bpath) as z:

@@ -74,6 +74,16 @@ def test_shims_forward_by_identity():
     assert repro.IndexSpec is repro.db.IndexSpec
 
 
+def test_database_io_deprecation_shims_stay_on_the_surface():
+    """PR 7 replaced cache_stats/reset_io with io_stats(); the old
+    names must survive as warning shims until a major rev drops them."""
+    from repro.db.database import Database
+    assert isinstance(Database.cache_stats, property)
+    assert callable(Database.reset_io)
+    assert "deprecat" in (Database.cache_stats.__doc__ or "").lower()
+    assert "deprecat" in (Database.reset_io.__doc__ or "").lower()
+
+
 def test_unknown_top_level_attribute_raises():
     try:
         repro.definitely_not_an_export

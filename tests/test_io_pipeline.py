@@ -1,0 +1,373 @@
+"""Async I/O pipeline: thread-safety, parity, IoSpec/io_stats surface.
+
+The contract under test (ISSUE 7 / docs/IO.md):
+
+* the thread-safe ``NodeCache`` returns byte-identical block contents
+  under any interleaving of demand fetches and speculative prefetches,
+  and its counters stay conservation-consistent under concurrency;
+* ids/dists (including ``explain=True`` traces) are bit-identical with
+  the pipeline on or off — speculation moves wall-clock and accounting,
+  never results;
+* ``IoSpec`` round-trips through create/save/open on both disk tiers
+  (sidecar / manifest), with an explicit ``spec.io`` overriding the
+  persisted one;
+* ``db.io_stats()`` is one typed record on every tier, the sharded
+  aggregation counts each shard exactly once, and the deprecated
+  ``cache_stats``/``reset_io`` shims warn but keep working.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro import db as catapultdb
+from repro.db import IndexSpec, IoSpec, IoStats
+from repro.store import layout
+from repro.store.cache import ZERO_IO_STATS, NodeCache
+from repro.store.io_engine import DiskVectorSearchEngine, read_io_sidecar
+from repro.store.pipeline import IoPipeline
+
+from conftest import make_clustered
+
+N, D, R = 256, 8, 6
+
+
+@pytest.fixture()
+def tiny_store(tmp_path):
+    rng = np.random.default_rng(3)
+    vecs = rng.normal(size=(N, D)).astype(np.float32)
+    adj = rng.integers(0, N, size=(N, R)).astype(np.int32)
+    store = layout.write_store(str(tmp_path / "tiny.ctpl"), vecs, adj,
+                               medoid=0)
+    yield store, vecs, adj
+    store.close()
+
+
+# ------------------------------------------------------------- cache threads
+
+def test_concurrent_fetch_prefetch_byte_identical(tiny_store):
+    """Hammer one small cache from demand + speculative threads at once;
+    every copy handed out must equal the store's bytes exactly."""
+    store, vecs, adj = tiny_store
+    cache = NodeCache(store, capacity=16)       # heavy eviction pressure
+    pipe = IoPipeline(cache, workers=4, queue_depth=64)
+    rng = np.random.default_rng(11)
+    plans = [rng.integers(0, N, size=(40, 5)) for _ in range(4)]
+    errors: list[str] = []
+
+    def demand(plan):
+        for row in plan:
+            v, a, hits, misses = cache.fetch(row)
+            if not (np.array_equal(v, vecs[row])
+                    and np.array_equal(a, adj[row])):
+                errors.append(f"fetch bytes diverged for {row}")
+            if hits + misses != row.size:
+                errors.append("fetch hit/miss accounting broke")
+
+    def speculate():
+        r = np.random.default_rng(5)
+        for _ in range(40):
+            pipe.speculate(r.integers(0, N, size=8))
+
+    threads = ([threading.Thread(target=demand, args=(p,)) for p in plans]
+               + [threading.Thread(target=speculate) for _ in range(2)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    pipe.drain()
+    pipe.close()
+    assert not errors, errors[:3]
+    st = cache.io_stats
+    # conservation: every demand slot was charged exactly once
+    assert st.hits + st.misses == sum(p.size for p in plans)
+    # every completed speculative read actually hit the store
+    assert st.prefetch_completed <= st.block_reads
+    assert st.prefetch_issued >= st.prefetch_completed
+
+
+def test_concurrent_fetch_batch_matches_sync(tiny_store):
+    """fetch_batch under concurrent prefetch returns the same bytes the
+    synchronous (no-pipeline) cache returns for the same requests."""
+    store, vecs, adj = tiny_store
+    rng = np.random.default_rng(23)
+    rounds = [[rng.integers(0, N, size=7) for _ in range(4)]
+              for _ in range(20)]
+
+    sync = NodeCache(store, capacity=16)
+    want_out = [sync.fetch_batch(reqs) for reqs in rounds]
+
+    cache = NodeCache(store, capacity=16, admission="locality")
+    pipe = IoPipeline(cache, workers=3, queue_depth=32)
+    stop = threading.Event()
+
+    def background():
+        r = np.random.default_rng(29)
+        while not stop.is_set():
+            pipe.speculate(r.integers(0, N, size=6))
+            pipe.advance()
+
+    t = threading.Thread(target=background)
+    t.start()
+    try:
+        got_out = [cache.fetch_batch(reqs) for reqs in rounds]
+    finally:
+        stop.set()
+        t.join()
+        pipe.drain()
+        pipe.close()
+    for got_round, want_round in zip(got_out, want_out):
+        for (gv, ga, _gh, _gm), (wv, wa, _wh, _wm) in zip(got_round,
+                                                          want_round):
+            np.testing.assert_array_equal(gv, wv)
+            np.testing.assert_array_equal(ga, wa)
+
+
+def test_pipeline_queue_depth_bounds_and_cancellation(tiny_store):
+    store, _vecs, _adj = tiny_store
+    cache = NodeCache(store, capacity=32)
+    pipe = IoPipeline(cache, workers=1, queue_depth=4)
+    # far more than the budget: the excess must be dropped and counted,
+    # never queued unboundedly
+    pipe.speculate(np.arange(64))
+    assert pipe.outstanding <= 4
+    pipe.drain()
+    st = cache.io_stats
+    assert st.prefetch_issued <= 4
+    assert st.prefetch_cancelled >= 60
+    # stale-round cancellation: whatever survives two advances is gone
+    pipe.advance()
+    pipe.advance()
+    assert pipe.outstanding == 0
+    pipe.close()
+
+
+def test_epoch_guard_discards_raced_install(tiny_store):
+    """A read that straddles invalidate() must not install stale bytes."""
+    store, vecs, _adj = tiny_store
+    cache = NodeCache(store, capacity=8)
+
+    class SlowStore:
+        header = store.header
+
+        def read_block(self, node):
+            release.wait(timeout=5.0)
+            return store.read_block(node)
+
+    release = threading.Event()
+    cache.store = SlowStore()
+    t = threading.Thread(target=cache.prefetch, args=(3,))
+    t.start()
+    cache.invalidate()          # epoch bump while the read is in flight
+    release.set()
+    t.join()
+    assert not cache.contains(3)          # bytes were discarded
+    assert cache.io_stats.block_reads == 1   # ...but the I/O was counted
+
+
+# ------------------------------------------------------------- engine parity
+
+@pytest.fixture(scope="module")
+def small_corpus():
+    data, centers, _ = make_clustered(n=600, d=16, n_clusters=8, seed=4)
+    rng = np.random.default_rng(9)
+    idx = rng.integers(0, centers.shape[0], 48)
+    q = (centers[idx]
+         + 0.4 * rng.normal(size=(48, 16)).astype(np.float32))
+    return data, q.astype(np.float32)
+
+
+def _mk(tmp_path, name, corpus, io):
+    data, _ = corpus
+    return catapultdb.create(
+        IndexSpec(tier="disk", path=str(tmp_path / name), io=io), data)
+
+
+def test_pipeline_on_off_ids_dists_bit_identical(tmp_path, small_corpus):
+    data, q = small_corpus
+    d_off = _mk(tmp_path, "off.ctpl", small_corpus, None)
+    d_on = _mk(tmp_path, "on.ctpl", small_corpus,
+               IoSpec(pipeline=True, workers=3, admission="locality"))
+    try:
+        for batch in np.array_split(q, 4):
+            r0 = d_off.search(batch, k=6)
+            r1 = d_on.search(batch, k=6)
+            np.testing.assert_array_equal(r0.ids, r1.ids)
+            np.testing.assert_array_equal(r0.dists, r1.dists)
+        # explain traces agree on results too (timings may differ)
+        t0 = d_off.search(q[:8], k=6, explain=True)
+        t1 = d_on.search(q[:8], k=6, explain=True)
+        np.testing.assert_array_equal(t0.ids, t1.ids)
+        np.testing.assert_array_equal(t0.dists, t1.dists)
+        # the pipelined engine actually speculated
+        st = d_on.io_stats()
+        assert st.prefetch_issued > 0
+    finally:
+        d_off.close()
+        d_on.close()
+
+
+# ------------------------------------------------------------- spec surface
+
+def test_iospec_validates():
+    with pytest.raises(ValueError):
+        IoSpec(workers=0)
+    with pytest.raises(ValueError):
+        IoSpec(prefetch_depth=0)
+    with pytest.raises(ValueError):
+        IoSpec(queue_depth=0)
+    with pytest.raises(ValueError):
+        IoSpec(admission="lru")
+    with pytest.raises(ValueError):
+        IndexSpec(io="pipeline")        # not an IoSpec
+    rt = IoSpec.from_dict(IoSpec(pipeline=True, workers=5).to_dict())
+    assert rt == IoSpec(pipeline=True, workers=5)
+    # unknown keys (a future format) are ignored, not fatal
+    assert IoSpec.from_dict({"pipeline": True, "new_knob": 1}).pipeline
+
+
+def test_iospec_sidecar_roundtrip_single_store(tmp_path, small_corpus):
+    data, q = small_corpus
+    spec_io = IoSpec(pipeline=True, workers=2, prefetch_depth=3,
+                     queue_depth=17, admission="locality")
+    db = _mk(tmp_path, "rt.ctpl", small_corpus, spec_io)
+    db.save()
+    db.close()
+    assert read_io_sidecar(str(tmp_path / "rt.ctpl")) == spec_io
+
+    reopened = catapultdb.open(str(tmp_path / "rt.ctpl"))
+    try:
+        assert reopened.spec.io == spec_io       # resumed, not defaulted
+        assert reopened.backend.pipeline is not None
+    finally:
+        reopened.close()
+    # explicit caller io overrides the persisted sidecar
+    forced = catapultdb.open(str(tmp_path / "rt.ctpl"),
+                             spec=IndexSpec(io=IoSpec(pipeline=False)))
+    try:
+        assert forced.backend.pipeline is None
+        assert forced.spec.io == IoSpec(pipeline=False)
+    finally:
+        forced.close()
+
+
+def test_iospec_manifest_roundtrip_sharded(tmp_path, small_corpus):
+    data, q = small_corpus
+    spec_io = IoSpec(pipeline=True, prefetch_depth=2)
+    db = catapultdb.create(
+        IndexSpec(tier="sharded", path=str(tmp_path / "sh.d"),
+                  n_shards=2, io=spec_io), data)
+    ids0, dists0, _ = db.search(q, k=6)
+    db.save()
+    db.close()
+
+    reopened = catapultdb.open(str(tmp_path / "sh.d"))
+    try:
+        assert reopened.spec.io == spec_io
+        assert all(e.io == spec_io and e.pipeline is not None
+                   for e in reopened.backend.shards)
+        ids1, dists1, _ = reopened.search(q, k=6)
+        np.testing.assert_array_equal(ids0, ids1)
+        np.testing.assert_array_equal(dists0, dists1)
+    finally:
+        reopened.close()
+
+
+# ------------------------------------------------------------- io_stats
+
+def test_io_stats_uniform_across_tiers(tmp_path, small_corpus):
+    data, q = small_corpus
+    ram = catapultdb.create(IndexSpec(tier="ram"), data)
+    assert ram.io_stats() == ZERO_IO_STATS      # all-zero, never absent
+    ram.close()
+
+    disk = _mk(tmp_path, "st.ctpl", small_corpus, IoSpec(pipeline=True))
+    try:
+        disk.search(q, k=6)
+        st = disk.io_stats()
+        assert isinstance(st, IoStats)
+        assert st.block_reads > 0
+        # reset=True hands the snapshot back, then cold-starts
+        snap = disk.io_stats(reset=True)
+        assert snap.block_reads >= st.block_reads
+        after = disk.io_stats()
+        # pins reload a handful of structural blocks; far below a round
+        assert after.block_reads < snap.block_reads
+        assert after.hits == 0
+    finally:
+        disk.close()
+
+
+def test_sharded_io_stats_sum_shards_exactly_once(tmp_path, small_corpus):
+    data, q = small_corpus
+    db = catapultdb.create(
+        IndexSpec(tier="sharded", path=str(tmp_path / "agg.d"),
+                  n_shards=3, io=IoSpec(pipeline=True)), data)
+    try:
+        for batch in np.array_split(q, 3):
+            db.search(batch, k=6)
+        for eng in db.backend.shards:
+            eng._quiesce_io()       # settle in-flight speculation
+        per = [eng.io_stats() for eng in db.backend.shards]
+        total = db.io_stats()
+        for i, field in enumerate(IoStats._fields):
+            assert total[i] == sum(s[i] for s in per), field
+    finally:
+        db.close()
+
+
+def test_deprecated_shims_warn_but_function(small_corpus):
+    data, _ = small_corpus
+    db = catapultdb.create(IndexSpec(tier="ram"), data)
+    try:
+        with pytest.warns(DeprecationWarning, match="io_stats"):
+            cs = db.cache_stats
+        assert cs.block_reads == 0
+        with pytest.warns(DeprecationWarning, match="io_stats"):
+            db.reset_io()
+    finally:
+        db.close()
+
+
+def test_metrics_export_prefetch_counters(tmp_path, small_corpus):
+    data, q = small_corpus
+    db = _mk(tmp_path, "m.ctpl", small_corpus, IoSpec(pipeline=True))
+    try:
+        db.search(q, k=6)
+        snap = db.metrics()
+        st = db.io_stats()
+        assert snap["catapultdb_cache_block_reads"] == float(st.block_reads)
+        assert snap["catapultdb_io_prefetch_issued"] == \
+            float(st.prefetch_issued)
+        assert "catapultdb_io_prefetch_hits" in snap
+    finally:
+        db.close()
+
+
+def test_mutation_quiesces_pipeline(tmp_path, small_corpus):
+    """insert/consolidate drain speculation before cache invalidation —
+    and the reopened index still answers identically afterwards."""
+    data, q = small_corpus
+    path = str(tmp_path / "mut.ctpl")
+    db = catapultdb.create(
+        IndexSpec(tier="disk", path=path, spare_capacity=32,
+                  io=IoSpec(pipeline=True, workers=2)), data)
+    try:
+        db.search(q, k=6)
+        rng = np.random.default_rng(17)
+        db.upsert(rng.normal(size=(8, data.shape[1])).astype(np.float32))
+        db.consolidate()
+        ids0, dists0, _ = db.search(q, k=6)
+        db.save()
+    finally:
+        db.close()
+    re = catapultdb.open(path)
+    try:
+        ids1, dists1, _ = re.search(q, k=6)
+        np.testing.assert_array_equal(ids0, ids1)
+        np.testing.assert_array_equal(dists0, dists1)
+    finally:
+        re.close()
