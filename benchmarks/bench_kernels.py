@@ -1,27 +1,138 @@
 """Pallas kernel micro-benchmarks (interpret mode on CPU — correctness
-and call overhead; MXU-shape sanity lives in the dry-run)."""
+and call overhead; MXU-shape sanity lives in the dry-run).
+
+Sections:
+
+* ``kernel/*`` — each standalone kernel vs its jnp oracle (allclose is
+  1/0 so the rows survive ``rows_to_json``'s float coercion).
+* ``kernel_fused/{l2,pq}/hop`` — the headline rows the CI gate consumes:
+  one fused traversal hop (``kernels.fused_hop``, ONE dispatch for the
+  whole batch) against the composed per-lane kernel path (a
+  ``gather_distance`` dispatch per lane, plus a ``pq_adc`` dispatch per
+  lane on the PQ variant, plus jnp merge glue).  Timing interleaves the
+  two implementations at repeat granularity so shared-runner scheduler
+  noise hits both alike; dispatch counts are measured from the jaxprs
+  (``pallas_call`` equations, sub-jaxprs included), not asserted by
+  hand.  ``roofline_us`` is the analytic HBM/MXU bound for the hop's
+  traffic from ``launch.roofline`` constants — reported for context,
+  never gated (CPU interpret-mode wall-clock is orders above it).
+
+CLI: ``--quick`` (CI-sized shapes), ``--json PATH`` (machine-readable
+rows for the bench-regression gate, see check_regression.py).
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.beam_search import _merge
+from repro.core.pq import PQCodebook, query_lut
 from repro.kernels import ops, ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))      # warmup: exactly one call
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> list[str]:
-    rng = np.random.default_rng(0)
+def _allclose(got, want, rtol=1e-3, atol=1e-3) -> bool:
+    """Finite-mask-aware comparison: the masks must MATCH (a kernel that
+    returns +inf where the oracle is finite is wrong even if the finite
+    values agree), then values compare under the shared mask."""
+    got, want = np.asarray(got), np.asarray(want)
+    if got.shape != want.shape:
+        return False
+    mask = np.isfinite(want)
+    if not np.array_equal(np.isfinite(got), mask):
+        return False
+    return bool(np.allclose(got[mask], want[mask], rtol=rtol, atol=atol))
+
+
+def _count_pallas_calls(fn, *args) -> int:
+    """Kernel dispatches per call, measured from the jaxpr."""
+    def walk(jaxpr) -> int:
+        n = sum(eqn.primitive.name == "pallas_call" for eqn in jaxpr.eqns)
+        return n + sum(walk(sub) for sub in jax.core.subjaxprs(jaxpr))
+
+    return walk(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def _interleaved_time(fn_a, fn_b, iters=5) -> tuple[float, float]:
+    """Time two implementations alternately (per repeat, not back to
+    back) so a scheduler hiccup lands on both rather than biasing one."""
+    jax.block_until_ready(fn_a())
+    jax.block_until_ready(fn_b())
+    ta = tb = 0.0
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        t1 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        t2 = time.perf_counter()
+        ta += t1 - t0
+        tb += t2 - t1
+    return ta / iters * 1e6, tb / iters * 1e6
+
+
+def _hop_inputs(rng, *, n, d, b, c, l, m=8, k_cent=16):
+    """One realistic mid-traversal hop: sorted partially-expanded beams,
+    candidate rows with -1 holes and one fully-converged lane."""
+    vec = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    cand = rng.integers(-1, n, size=(b, c)).astype(np.int32)
+    cand[-1] = -1                     # converged lane: kernel no-op path
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    bids = rng.integers(-1, n, size=(b, l)).astype(np.int32)
+    bd = np.where(bids < 0, np.inf,
+                  (rng.random((b, l)) * 10).astype(np.float32))
+    bexp = np.where(bids < 0, True, rng.random((b, l)) < 0.5)
+    order = np.argsort(bd, axis=1)
+    bids = np.take_along_axis(bids, order, 1)
+    bd = np.take_along_axis(bd, order, 1)
+    bexp = np.take_along_axis(bexp, order, 1)
+    cb = PQCodebook(centroids=jnp.asarray(
+        rng.normal(size=(m, k_cent, d // m)).astype(np.float32)))
+    codes = jnp.asarray(rng.integers(0, k_cent, size=(n, m)).astype(np.int32))
+    return (vec, jnp.asarray(cand), q, jnp.asarray(bids),
+            jnp.asarray(bd.astype(np.float32)), jnp.asarray(bexp), cb, codes)
+
+
+def _unfused_hop_l2(vec, cand, q, bids, bd, bexp):
+    """The composed kernel path: one gather_distance dispatch PER LANE
+    plus the jnp merge glue beam_search's unfused body uses."""
+    outs = []
+    b = cand.shape[0]
+    for i in range(b):
+        d = ops.gather_distance(vec, cand[i], q[i])
+        outs.append(_merge(bids[i], bd[i], bexp[i], cand[i], d))
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+
+def _unfused_hop_pq(cb, codes, cand, q, bids, bd, bexp):
+    """Composed PQ path: per-lane LUT + pq_adc dispatch + jnp merge."""
+    outs = []
+    b = cand.shape[0]
+    for i in range(b):
+        lut = query_lut(cb, q[i])
+        d = ops.pq_adc(lut, codes[jnp.maximum(cand[i], 0)])
+        d = jnp.where(cand[i] < 0, jnp.inf, d)
+        outs.append(_merge(bids[i], bd[i], bexp[i], cand[i], d))
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs)
+
+
+def _roofline_us(bytes_moved: float, flops: float) -> float:
+    return max(bytes_moved / HBM_BW, flops / PEAK_FLOPS) * 1e6
+
+
+def run_standalone(rng) -> list[str]:
     q = jnp.asarray(rng.normal(size=(128, 128)).astype(np.float32))
     x = jnp.asarray(rng.normal(size=(1024, 128)).astype(np.float32))
     ids = jnp.asarray(rng.integers(0, 1024, 64).astype(np.int32))
@@ -40,13 +151,70 @@ def run() -> list[str]:
     ]
     out = []
     for name, op, oracle in rows:
-        got, want = np.asarray(op()), np.asarray(oracle())
-        ok = np.allclose(got[np.isfinite(got)], want[np.isfinite(want)],
-                         rtol=1e-3, atol=1e-3)
-        us = _time(lambda: op())
-        out.append(f"{name},{us:.1f},allclose={ok}")
+        ok = _allclose(op(), oracle())
+        us = _time(op)
+        out.append(f"{name},{us:.1f},allclose={int(ok)}")
     return out
 
 
+def run_fused(rng, *, n, d, b, c, l) -> list[str]:
+    vec, cand, q, bids, bd, bexp, cb, codes = _hop_inputs(
+        rng, n=n, d=d, b=b, c=c, l=l)
+    out = []
+
+    # ---- L2 variant -----------------------------------------------------
+    fused = lambda: ops.fused_hop_l2(vec, cand, q, bids, bd, bexp)
+    unfused = lambda: _unfused_hop_l2(vec, cand, q, bids, bd, bexp)
+    ok = all(_allclose(g, w, rtol=0, atol=0)
+             for g, w in zip(fused(), unfused()))
+    fd = _count_pallas_calls(fused)
+    ud = _count_pallas_calls(unfused)
+    fus, uus = _interleaved_time(fused, unfused)
+    # per-hop traffic: B*C gathered rows + B queries, read once
+    roof = _roofline_us(b * c * d * 4 + b * d * 4, 3 * b * c * d)
+    out.append(
+        f"kernel_fused/l2/hop,{fus:.1f},unfused_us={uus:.1f};"
+        f"speedup={uus / max(fus, 1e-9):.2f};"
+        f"fused_dispatches_per_hop={fd};unfused_dispatches_per_hop={ud};"
+        f"roofline_us={roof:.3f};allclose={int(ok)}")
+
+    # ---- PQ-ADC variant -------------------------------------------------
+    luts = jax.vmap(lambda qq: query_lut(cb, qq))(q)
+    fused_pq = lambda: ops.fused_hop_pq(luts, codes, cand, bids, bd, bexp)
+    unfused_pq = lambda: _unfused_hop_pq(cb, codes, cand, q, bids, bd, bexp)
+    ok = all(_allclose(g, w, rtol=0, atol=0)
+             for g, w in zip(fused_pq(), unfused_pq()))
+    fd = _count_pallas_calls(fused_pq)
+    ud = _count_pallas_calls(unfused_pq)
+    fus, uus = _interleaved_time(fused_pq, unfused_pq)
+    m, k_cent = cb.centroids.shape[0], cb.centroids.shape[1]
+    roof = _roofline_us(b * c * m * 4 + b * m * k_cent * 4, 2 * b * c * m)
+    out.append(
+        f"kernel_fused/pq/hop,{fus:.1f},unfused_us={uus:.1f};"
+        f"speedup={uus / max(fus, 1e-9):.2f};"
+        f"fused_dispatches_per_hop={fd};unfused_dispatches_per_hop={ud};"
+        f"roofline_us={roof:.3f};allclose={int(ok)}")
+    return out
+
+
+def run(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(0)
+    shapes = (dict(n=2048, d=32, b=8, c=12, l=12) if quick
+              else dict(n=8192, d=64, b=32, c=24, l=16))
+    return run_standalone(rng) + run_fused(rng, **shapes)
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized shapes (matches benchmarks.run --quick)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write structured results (regression gate)")
+    args = p.parse_args()
+    from benchmarks.bench_disk import rows_to_json
+    rows = run(quick=args.quick)
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"quick": int(args.quick),
+                       "results": rows_to_json(rows)}, f, indent=1)

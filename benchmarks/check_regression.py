@@ -46,7 +46,12 @@ regression can't hide behind a stale baseline file):
   change results),
 * fig7_adapt/sudden: the adaptive system recovers within budget AND
   the frozen-catapult baseline does NOT — if frozen recovers, the
-  shift scenario lost its teeth and the adaptation claim is vacuous.
+  shift scenario lost its teeth and the adaptation claim is vacuous,
+* kernel_fused/*: the fused traversal-hop kernel's whole claim — the
+  measured dispatch count per hop must be exactly 1, the fused
+  wall-clock must not exceed the composed per-lane kernel path on the
+  interleaved repeat, and the outputs must match bit-for-bit
+  (allclose=1 under zero tolerance).
 
 To re-baseline after an intentional perf change:
 
@@ -259,6 +264,35 @@ def check(current: dict, baseline: dict) -> list[str]:
         failures.append(
             "fig7_adapt/sudden rows present but adaptive/frozen pair "
             "incomplete")
+
+    # kernel_fused acceptance, fresh run: one dispatch per hop, fused
+    # wall-clock <= the composed per-lane path, bit-identical outputs.
+    # A baseline that carries the rows pins them: silently dropping the
+    # section from the bench must fail, not pass vacuously.
+    for name in base:
+        if name.startswith("kernel_fused/") and name not in cur:
+            failures.append(f"{name}: fused-hop row missing from fresh run")
+    for name, m in cur.items():
+        if not name.startswith("kernel_fused/"):
+            continue
+        fd = m.get("fused_dispatches_per_hop")
+        if fd != 1:
+            failures.append(
+                f"{name}: fused hop measured {fd} Pallas dispatches "
+                f"(must be exactly 1 — the fusion claim)")
+        fus, uus = m.get("us_per_call"), m.get("unfused_us")
+        if fus is None or uus is None:
+            failures.append(f"{name}: fused/unfused timing pair missing")
+        elif fus > uus:
+            failures.append(
+                f"{name}: fused hop {fus:.1f}us/call > composed path "
+                f"{uus:.1f}us/call on the interleaved repeat — fusion "
+                f"stopped paying for itself")
+        if m.get("allclose") != 1:
+            failures.append(
+                f"{name}: fused hop output differs from the composed "
+                f"path (allclose={m.get('allclose')}) — bit-identity "
+                f"broken")
     return failures
 
 

@@ -66,7 +66,7 @@ def main() -> None:
         "obs": lambda: bench_obs.run(
             n=2_500 if quick else 8_000,
             n_queries=1_536 if quick else 3_072),
-        "kernels": bench_kernels.run,
+        "kernels": lambda: bench_kernels.run(quick=quick),
     }
     only = set(args.only.split(",")) if args.only else None
 

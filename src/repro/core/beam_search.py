@@ -107,6 +107,10 @@ class SearchSpec:
     # visited set V — the expansion path alone lacks the long-range
     # diversity that keeps clustered corpora navigable)
     record_scored: bool = False
+    # "unfused" = composed jnp/vmap hop; "fused" = single Pallas dispatch
+    # per hop (kernels.fused_hop) when the dist_fn is a fused hop backend.
+    # Results are bit-identical either way; this is purely a speed knob.
+    hop_backend: str = "unfused"
 
 
 def beam_search(
@@ -138,6 +142,14 @@ def beam_search(
     """
     b, _ = queries.shape
     l, max_iters = spec.beam_width, spec.max_iters
+    # Fused hop path: dist_fn doubles as a hop backend (kernels.fused_hop)
+    # carrying the gather table; one Pallas dispatch covers gather +
+    # distance + merge for the whole batch.  Filtered traversal masks
+    # distances per neighbor, which the kernel does not model — those
+    # searches stay on the composed path (results are identical; the
+    # fused path is purely a speed knob).
+    use_fused = (getattr(dist_fn, "is_fused_hop", False)
+                 and neighbor_mask_fn is None)
 
     def lane_init(q, sp, lane_idx):
         d0 = dist_fn(q, sp)
@@ -151,7 +163,15 @@ def beam_search(
         return ids, dists, exp, n
 
     lane_idx = jnp.arange(b, dtype=jnp.int32)
-    ids, dists, exp, n0 = jax.vmap(lane_init)(queries, start_ids, lane_idx)
+    if use_fused:
+        # init is a fused hop into an empty beam: candidates = start ids
+        ids, dists, exp, n0 = dist_fn.hop_batch(
+            queries, start_ids,
+            jnp.full((b, l), INVALID, jnp.int32),
+            jnp.full((b, l), INF),
+            jnp.ones((b, l), bool))
+    else:
+        ids, dists, exp, n0 = jax.vmap(lane_init)(queries, start_ids, lane_idx)
     r = adjacency.shape[1]
     scored0 = (jnp.full((b, max_iters, r), INVALID, jnp.int32)
                if spec.record_scored
@@ -197,7 +217,34 @@ def beam_search(
         return BeamState(ids, dists, exp, hops, ndists, trace, scored,
                          s.it + 1)
 
-    final = jax.lax.while_loop(cond, body, state)
+    def fused_body(s: BeamState):
+        # Same semantics as `body`, but the gather/distance/merge of all
+        # B lanes is one kernel dispatch.  Converged lanes feed all-(-1)
+        # neighbor rows (the kernel skips their DMAs) and their outputs
+        # are discarded below, exactly like the composed path.
+        active = jnp.any((s.ids >= 0) & ~s.expanded, axis=1)        # (B,)
+        sel = jnp.argmin(
+            jnp.where(s.expanded | (s.ids < 0), INF, s.dists), axis=1)
+        node = jnp.take_along_axis(s.ids, sel[:, None], axis=1)[:, 0]
+        exp2 = s.expanded.at[lane_idx, sel].set(True)
+        nbrs = jnp.where(((node < 0) | ~active)[:, None], INVALID,
+                         adjacency[jnp.maximum(node, 0)])         # (B, R)
+        nids, ndsts, nexp, nfresh = dist_fn.hop_batch(
+            queries, nbrs, s.ids, s.dists, exp2)
+        act = active[:, None]
+        ids = jnp.where(act, nids, s.ids)
+        dists = jnp.where(act, ndsts, s.dists)
+        exp = jnp.where(act, nexp, s.expanded)
+        hops = s.hops + active.astype(jnp.int32)
+        ndists = s.ndists + jnp.where(active, nfresh, 0)
+        trace = s.trace.at[:, s.it].set(jnp.where(active, node, INVALID))
+        scored = s.scored
+        if spec.record_scored:
+            scored = scored.at[:, s.it].set(jnp.where(act, nbrs, INVALID))
+        return BeamState(ids, dists, exp, hops, ndists, trace, scored,
+                         s.it + 1)
+
+    final = jax.lax.while_loop(cond, fused_body if use_fused else body, state)
 
     res_dists = final.dists
     if result_mask_fn is not None:
@@ -219,4 +266,8 @@ def beam_search(
 def beam_search_l2(adjacency: jax.Array, vectors: jax.Array, queries: jax.Array,
                    start_ids: jax.Array, spec: SearchSpec) -> SearchResult:
     """Convenience jit entry point: full-precision L2 search, no filters."""
+    if spec.hop_backend == "fused":
+        from repro.kernels.fused_hop import FusedL2Hop  # lazy: core↛kernels
+        return beam_search(adjacency, queries, start_ids, spec,
+                           FusedL2Hop(vectors))
     return beam_search(adjacency, queries, start_ids, spec, l2_dist_fn(vectors))

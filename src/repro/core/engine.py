@@ -164,6 +164,10 @@ class VectorSearchEngine:
     catapult_enabled: bool = True
     catapult_override: Optional[bool] = None
     adapt_state: Optional[object] = None
+    # traversal hop implementation: "unfused" (composed jnp/vmap hop) or
+    # "fused" (one Pallas dispatch per hop, kernels.fused_hop).  Results
+    # are bit-identical; filtered searches always use the composed path.
+    hop_backend: str = 'unfused'
 
     @property
     def catapult_active(self) -> bool:
@@ -331,7 +335,8 @@ class VectorSearchEngine:
         # long at small beam widths (the whole point of catapults), so the
         # cap must stay far above typical path lengths.
         spec = SearchSpec(beam_width=l, k=(l if self.pq_subspaces else k),
-                          max_iters=max_iters or (4 * l + 64))
+                          max_iters=max_iters or (4 * l + 64),
+                          hop_backend=self.hop_backend)
         flabels = (jnp.asarray(filter_labels, jnp.int32)
                    if filter_labels is not None
                    else jnp.full((b,), -1, jnp.int32))
@@ -406,7 +411,8 @@ class VectorSearchEngine:
         queries = np.ascontiguousarray(queries, np.float32)
         b = queries.shape[0]
         l = beam_width or max(2 * k, 16)
-        spec1 = SearchSpec(beam_width=l, k=l, max_iters=phase1_iters)
+        spec1 = SearchSpec(beam_width=l, k=l, max_iters=phase1_iters,
+                           hop_backend=self.hop_backend)
         if self.mode == 'catapult' and self.catapult_active:
             new_cat, res, st = _search_catapult(
                 self._cat, self._adj, self._vec, self._tomb, None, None,
@@ -432,7 +438,8 @@ class VectorSearchEngine:
             # fixed phase-2 chunk => exactly one extra jit signature; the
             # straggler fraction rarely needs more than one chunk
             chunk = max(b // 4, 32)
-            spec2 = SearchSpec(beam_width=l, k=l, max_iters=4 * l + 64)
+            spec2 = SearchSpec(beam_width=l, k=l, max_iters=4 * l + 64,
+                               hop_backend=self.hop_backend)
             for lo in range(0, idx.size, chunk):
                 part = idx[lo: lo + chunk]
                 sel = np.resize(part, chunk)   # pad by repetition
@@ -524,7 +531,15 @@ class VectorSearchEngine:
 # jit'd search paths (functions of arrays only -> stable cache keys)
 # ---------------------------------------------------------------------------
 
-def _mk_dist(vec, pq_sub, pqcb, codes):
+def _mk_dist(vec, pq_sub, pqcb, codes, hop_backend='unfused'):
+    if hop_backend == 'fused':
+        # fused hop backends ARE dist_fns (same jnp expressions, so
+        # catapult entry scoring and filtered fallbacks are identical)
+        # that additionally let beam_search run one kernel per hop
+        from repro.kernels.fused_hop import FusedL2Hop, FusedPQHop
+        if pq_sub:
+            return FusedPQHop(pqcb, codes)
+        return FusedL2Hop(vec)
     if pq_sub:
         return pq_mod.adc_dist_fn(pqcb, codes)
     return l2_dist_fn(vec)
@@ -554,7 +569,7 @@ def _search_diskann(adj, vec, tomb, labels, label_entry, queries, flabels,
         starts = jnp.broadcast_to(medoid, (b,))
     nmask, rmask = _masks(tomb, labels, flabels)
     return beam_search(adj, queries, starts[:, None].astype(jnp.int32), spec,
-                       _mk_dist(vec, pq_sub, pqcb, codes),
+                       _mk_dist(vec, pq_sub, pqcb, codes, spec.hop_backend),
                        neighbor_mask_fn=nmask, result_mask_fn=rmask)
 
 
@@ -563,7 +578,8 @@ def _search_apg(apg_index, adj, vec, tomb, labels, queries, flabels, medoid,
                 spec):
     starts = apg.entry_points(apg_index, queries, medoid)
     nmask, rmask = _masks(tomb, labels, flabels)
-    return beam_search(adj, queries, starts, spec, l2_dist_fn(vec),
+    return beam_search(adj, queries, starts, spec,
+                       _mk_dist(vec, 0, None, None, spec.hop_backend),
                        neighbor_mask_fn=nmask, result_mask_fn=rmask)
 
 
@@ -573,7 +589,8 @@ def _search_catapult(cat_state, adj, vec, tomb, labels, label_entry, queries,
                      publish_mask=None):
     nmask, rmask = _masks(tomb, labels, flabels)
     return cat.catapulted_lookup(
-        cat_state, adj, queries, spec, _mk_dist(vec, pq_sub, pqcb, codes),
+        cat_state, adj, queries, spec,
+        _mk_dist(vec, pq_sub, pqcb, codes, spec.hop_backend),
         medoid, filter_labels=flabels, node_labels=labels,
         label_entry=label_entry, neighbor_mask_fn=nmask,
         result_mask_fn=rmask, publish_mask=publish_mask)

@@ -89,7 +89,8 @@ def create(spec: IndexSpec, vectors: np.ndarray,
         eng = VectorSearchEngine(
             mode=spec.mode, vamana=spec.vamana(), n_bits=spec.n_bits,
             bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
-            seed=spec.seed, capacity=n + spec.spare_capacity)
+            seed=spec.seed, capacity=n + spec.spare_capacity,
+            hop_backend=spec.hop_backend)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   prebuilt=prebuilt)
     elif spec.tier == "disk":
@@ -99,7 +100,7 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
             seed=spec.seed, capacity=n + spec.spare_capacity,
             cache_frames=spec.cache_frames, io=spec.io,
-            store_path=spec.path)
+            hop_backend=spec.hop_backend, store_path=spec.path)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   prebuilt=prebuilt)
     else:
@@ -108,7 +109,8 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             store_dir=spec.path, n_shards=spec.n_shards, mode=spec.mode,
             vamana=spec.vamana(), n_bits=spec.n_bits,
             bucket_capacity=spec.bucket_capacity, pq_subspaces=spec.pq,
-            seed=spec.seed, cache_frames=spec.cache_frames, io=spec.io)
+            seed=spec.seed, cache_frames=spec.cache_frames, io=spec.io,
+            hop_backend=spec.hop_backend)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   spare_capacity=spec.spare_capacity)
 
@@ -137,7 +139,7 @@ def open(path: str, *, mode: Optional[str] = None,
     # persisted IoSpec (.io.json sidecar / manifest "io"); an explicit
     # runtime.io overrides it
     kwargs = dict(vamana=runtime.vamana(), cache_frames=runtime.cache_frames,
-                  io=runtime.io)
+                  io=runtime.io, hop_backend=runtime.hop_backend)
     if tier == "sharded":
         from repro.store.sharded_store import ShardedDiskVectorSearchEngine
         eng = ShardedDiskVectorSearchEngine.load(path, mode=mode, **kwargs)
@@ -157,7 +159,8 @@ def open(path: str, *, mode: Optional[str] = None,
         filters=bool(eng.filtered), n_bits=eng.n_bits,
         bucket_capacity=eng.bucket_capacity, seed=eng.seed,
         n_shards=getattr(eng, "n_shards", runtime.n_shards),
-        io=getattr(eng, "io", runtime.io))
+        io=getattr(eng, "io", runtime.io),
+        hop_backend=getattr(eng, "hop_backend", runtime.hop_backend))
     db = Database(eng, opened, _caps(tier, eng.filtered))
     db.warm()
     return db

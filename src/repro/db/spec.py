@@ -40,6 +40,7 @@ class CapabilityError(RuntimeError):
 
 
 ADMISSION_POLICIES = ("clock", "locality")
+HOP_BACKENDS = ("unfused", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +167,13 @@ class IndexSpec:
     # disk I/O engine (None = the synchronous default, IoSpec());
     # persisted with the index and resumed by open()
     io: Optional[IoSpec] = None
+    # traversal hop implementation: 'unfused' composes the hop from
+    # separate gather/distance ops + jnp merge glue; 'fused' runs the
+    # whole hop (neighbor gather + L2/PQ-ADC distance + beam merge) as
+    # ONE Pallas dispatch per hop (kernels.fused_hop).  Results are
+    # bit-identical on every tier — this is purely a speed knob, so it
+    # is a runtime choice (not persisted; pass it again at open()).
+    hop_backend: str = "unfused"
     # serving defaults (overridable per SearchRequest)
     k: int = 10
     beam_width: Optional[int] = None
@@ -198,6 +206,9 @@ class IndexSpec:
         if self.io is not None and not isinstance(self.io, IoSpec):
             raise ValueError(f"io must be an IoSpec (or None for the "
                              f"synchronous default), got {type(self.io)}")
+        if self.hop_backend not in HOP_BACKENDS:
+            raise ValueError(f"hop_backend must be one of {HOP_BACKENDS}, "
+                             f"got {self.hop_backend!r}")
 
     def vamana(self) -> VamanaParams:
         return VamanaParams(max_degree=self.degree,

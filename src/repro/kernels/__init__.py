@@ -9,6 +9,9 @@ overlapped SSD vector fetches).  The TPU-native counterparts:
                     overlapped "SSD read" of DiskANN, one level up)
   lsh_hash        — hyperplane projection + sign bit-packing (Alg. 2 line 2)
   pq_adc          — PQ LUT gather-sum as a one-hot MXU contraction
+  fused_hop       — the whole traversal hop (neighbor gather + L2 or
+                    PQ-ADC distance + per-lane top-L beam merge) in ONE
+                    dispatch; opt in via hop_backend="fused"
 
 ``ops`` holds the public padded/jit wrappers (interpret=True off-TPU),
 ``ref`` the pure-jnp oracles each kernel is verified against.

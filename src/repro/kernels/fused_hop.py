@@ -1,0 +1,307 @@
+"""Fused traversal-hop kernel — one Pallas dispatch per beam-search hop.
+
+Algorithm 1's inner loop is the hot path every tier shares, and the
+unfused implementation pays for it piecewise: a neighbor gather
+(``gather_distance``'s scalar-prefetch pattern, or a jnp table gather),
+a distance kernel (``l2_distance`` / ``pq_adc``), and jnp top-k merge
+glue in ``core/beam_search.py`` — three-plus dispatches and HBM
+round-trips per hop.  This kernel fuses the whole hop:
+
+  * **gather** — the grid is one step per query lane; each step issues
+    one in-kernel async copy per neighbor row (HBM -> VMEM scratch),
+    the DMA-overlap structure of DiskANN's SSD read with the adjacency
+    ids scalar-prefetched into SMEM exactly as ``gather_distance``
+    prefetches its gather list,
+  * **distance** — computed on the VMEM-resident rows, either
+    full-precision squared L2 against the lane's query or the PQ-ADC
+    LUT sum against the lane's per-query lookup table,
+  * **merge** — the per-lane top-L beam merge (dedup against the beam,
+    dedup among candidates, stable ascending selection) runs in the
+    same kernel and writes the NEW beam (ids / dists / expanded) plus
+    the fresh-distance count, so no jnp ``argsort`` glue remains.
+
+The merge replicates ``core.beam_search._merge`` **bit-exactly**: the
+selection loop picks the first minimum each round (= stable argsort
+order), +inf slots collapse to (id=-1, expanded=True), and the fresh
+count excludes beam duplicates and intra-candidate duplicates — CI
+asserts ids/dists equality against the unfused path on every tier.
+
+Lane divergence: a lane whose candidate row is all ``-1`` (converged
+lanes in a fixed-shape serving batch) skips its gather DMAs entirely
+(``pl.when``) and its merge degenerates to re-emitting the sorted beam
+— a masked no-op, so batched multi-query traffic rides one kernel at
+any divergence.
+
+Off-TPU the public wrappers run with ``interpret=True`` (ops.py
+convention): CPU CI executes the very same kernel body.  The pure-jnp
+oracle is ``ref.fused_hop_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _merge_into_beam(cand_ids, cand_d, beam_ids, beam_d, beam_exp,
+                     oids_ref, odists_ref, oexp_ref, onf_ref, *, c, l):
+    """Shared merge tail: dedup + stable top-L selection, written in place.
+
+    ``beam_exp`` and ``oexp_ref`` carry the expanded flags as int32 —
+    Mosaic-friendlier than bool vectors; the jit wrappers cast at the
+    boundary.
+    """
+    in_beam = jnp.any((cand_ids[:, None] == beam_ids[None, :])
+                      & (beam_ids[None, :] >= 0), axis=1)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (c, c), 0)
+    earlier = (cand_ids[:, None] == cand_ids[None, :]) & (pos.T < pos)
+    dup = in_beam | jnp.any(earlier, axis=1)
+    fresh = ~dup & (cand_ids >= 0)
+    cand_d = jnp.where(fresh, cand_d, jnp.inf)
+
+    ids_cat = jnp.concatenate([beam_ids, cand_ids])
+    d_cat = jnp.concatenate([beam_d, cand_d])
+    exp_cat = jnp.concatenate([beam_exp, jnp.zeros((c,), jnp.int32)])
+    # Stable ascending top-L: argmin returns the FIRST minimum, and a
+    # taken slot is masked to +inf (mask-based, no dynamic scatter) —
+    # exactly stable-argsort order.  All-inf picks emit (-1, inf, True)
+    # whichever index wins, matching _merge's invalid-slot collapse.
+    taken = jax.lax.broadcasted_iota(jnp.int32, (l + c, 1), 0)[:, 0]
+    work = d_cat
+    for s in range(l):
+        idx = jnp.argmin(work)
+        dv = work[idx]
+        invalid = ~jnp.isfinite(dv)
+        oids_ref[0, s] = jnp.where(invalid, -1, ids_cat[idx])
+        odists_ref[0, s] = dv
+        oexp_ref[0, s] = jnp.where(invalid, 1, exp_cat[idx])
+        work = jnp.where(taken == idx, jnp.inf, work)
+    onf_ref[0] = jnp.sum(fresh).astype(jnp.int32)
+
+
+def _gather_rows(ids_pf_ref, table_ref, xs_ref, sem, *, c):
+    """Issue one async copy per candidate row (HBM -> VMEM scratch),
+    skipped wholesale when the lane has no valid candidate (converged
+    lane in a divergent batch -> no-op hop).  Invalid ids fetch row 0;
+    their distances are masked to +inf afterwards."""
+    i = pl.program_id(0)
+    # scalar max-scan over the SMEM row: -1s may sit anywhere (catapult
+    # start sets put a missed catapult slot before valid fallbacks)
+    hi = ids_pf_ref[i, 0]
+    for j in range(1, c):
+        hi = jnp.maximum(hi, ids_pf_ref[i, j])
+
+    @pl.when(hi >= 0)
+    def _():
+        dmas = []
+        for j in range(c):
+            row = jnp.maximum(ids_pf_ref[i, j], 0)
+            dma = pltpu.make_async_copy(
+                table_ref.at[pl.ds(row, 1), :],
+                xs_ref.at[pl.ds(j, 1), :], sem.at[j])
+            dma.start()
+            dmas.append(dma)
+        for dma in dmas:
+            dma.wait()
+
+
+def _l2_hop_kernel(ids_pf_ref, cand_ref, q_ref, bids_ref, bdists_ref,
+                   bexp_ref, vec_ref, oids_ref, odists_ref, oexp_ref,
+                   onf_ref, xs_ref, sem, *, c, l):
+    _gather_rows(ids_pf_ref, vec_ref, xs_ref, sem, c=c)
+    x = xs_ref[...].astype(jnp.float32)               # (c, d) gathered rows
+    q = q_ref[...].astype(jnp.float32)                # (1, d)
+    cand_ids = cand_ref[0, :]
+    cand_d = jnp.sum(jnp.square(x - q), axis=1)       # (c,)
+    cand_d = jnp.where(cand_ids < 0, jnp.inf, cand_d)
+    _merge_into_beam(cand_ids, cand_d, bids_ref[0, :], bdists_ref[0, :],
+                     bexp_ref[0, :], oids_ref, odists_ref, oexp_ref,
+                     onf_ref, c=c, l=l)
+
+
+def _pq_hop_kernel(ids_pf_ref, cand_ref, lut_ref, bids_ref, bdists_ref,
+                   bexp_ref, codes_ref, oids_ref, odists_ref, oexp_ref,
+                   onf_ref, xs_ref, sem, *, c, l):
+    _gather_rows(ids_pf_ref, codes_ref, xs_ref, sem, c=c)
+    codes = xs_ref[...]                                # (c, M) int32
+    lut = lut_ref[0].astype(jnp.float32)               # (M, K)
+    cand_ids = cand_ref[0, :]
+    # same gather-sum expression as pq.adc_dist_fn, bit for bit
+    cand_d = jnp.take_along_axis(
+        lut[None], codes[:, :, None], axis=2)[:, :, 0].sum(-1)
+    cand_d = jnp.where(cand_ids < 0, jnp.inf, cand_d)
+    _merge_into_beam(cand_ids, cand_d, bids_ref[0, :], bdists_ref[0, :],
+                     bexp_ref[0, :], oids_ref, odists_ref, oexp_ref,
+                     onf_ref, c=c, l=l)
+
+
+def _out_shapes(b, l):
+    return [
+        jax.ShapeDtypeStruct((b, l), jnp.int32),    # new beam ids
+        jax.ShapeDtypeStruct((b, l), jnp.float32),  # new beam dists
+        jax.ShapeDtypeStruct((b, l), jnp.int32),    # new expanded flags
+        jax.ShapeDtypeStruct((b,), jnp.int32),      # fresh-distance counts
+    ]
+
+
+def _out_specs(l):
+    return [
+        pl.BlockSpec((1, l), lambda i, pf: (i, 0)),
+        pl.BlockSpec((1, l), lambda i, pf: (i, 0)),
+        pl.BlockSpec((1, l), lambda i, pf: (i, 0)),
+        pl.BlockSpec((1,), lambda i, pf: (i,)),
+    ]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_hop_l2(vectors: jax.Array, cand_ids: jax.Array, queries: jax.Array,
+                 beam_ids: jax.Array, beam_dists: jax.Array,
+                 beam_exp: jax.Array, *, interpret: bool = False):
+    """One fused L2 hop for a whole batch.
+
+    Args:
+      vectors: (N, d) float table, stays in HBM (ANY memory space).
+      cand_ids: (B, C) int32 candidate ids (a lane's adjacency row, or
+        its start-point set), -1 padded; an all-``-1`` lane no-ops.
+      queries: (B, d) query batch.
+      beam_ids / beam_dists / beam_exp: (B, L) current beam state.
+
+    Returns (new_ids, new_dists, new_exp, n_fresh) matching
+    ``_merge`` applied per lane with ``l2_dist_fn`` distances.
+    """
+    b, c = cand_ids.shape
+    _, d = vectors.shape
+    l = beam_ids.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, pf: (i, 0)),   # candidate ids
+            pl.BlockSpec((1, d), lambda i, pf: (i, 0)),   # query row
+            pl.BlockSpec((1, l), lambda i, pf: (i, 0)),   # beam ids
+            pl.BlockSpec((1, l), lambda i, pf: (i, 0)),   # beam dists
+            pl.BlockSpec((1, l), lambda i, pf: (i, 0)),   # beam expanded
+            pl.BlockSpec(memory_space=pltpu.ANY),         # vector table
+        ],
+        out_specs=_out_specs(l),
+        scratch_shapes=[pltpu.VMEM((c, d), vectors.dtype),
+                        pltpu.SemaphoreType.DMA((c,))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_l2_hop_kernel, c=c, l=l),
+        grid_spec=grid_spec,
+        out_shape=_out_shapes(b, l),
+        interpret=interpret,
+    )(cand_ids, cand_ids, queries, beam_ids, beam_dists,
+      beam_exp.astype(jnp.int32), vectors)
+    return out[0], out[1], out[2].astype(bool), out[3]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_hop_pq(luts: jax.Array, codes: jax.Array, cand_ids: jax.Array,
+                 beam_ids: jax.Array, beam_dists: jax.Array,
+                 beam_exp: jax.Array, *, interpret: bool = False):
+    """One fused PQ-ADC hop for a whole batch.
+
+    Args:
+      luts: (B, M, K) per-query ADC lookup tables (``pq.query_lut``).
+      codes: (N, M) int32 PQ code table, stays in HBM.
+      cand_ids / beam_*: as in :func:`fused_hop_l2`.
+    """
+    b, c = cand_ids.shape
+    _, m = codes.shape
+    k = luts.shape[2]
+    l = beam_ids.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, c), lambda i, pf: (i, 0)),       # candidate ids
+            pl.BlockSpec((1, m, k), lambda i, pf: (i, 0, 0)),  # lane LUT
+            pl.BlockSpec((1, l), lambda i, pf: (i, 0)),
+            pl.BlockSpec((1, l), lambda i, pf: (i, 0)),
+            pl.BlockSpec((1, l), lambda i, pf: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),             # code table
+        ],
+        out_specs=_out_specs(l),
+        scratch_shapes=[pltpu.VMEM((c, m), codes.dtype),
+                        pltpu.SemaphoreType.DMA((c,))],
+    )
+    out = pl.pallas_call(
+        functools.partial(_pq_hop_kernel, c=c, l=l),
+        grid_spec=grid_spec,
+        out_shape=_out_shapes(b, l),
+        interpret=interpret,
+    )(cand_ids, cand_ids, luts, beam_ids, beam_dists,
+      beam_exp.astype(jnp.int32), codes)
+    return out[0], out[1], out[2].astype(bool), out[3]
+
+
+def fused_hop(vectors, cand_ids, query, beam_ids, beam_dists, beam_exp, *,
+              interpret: bool = False):
+    """Single-query spelling: (C,) candidates, (d,) query, (L,) beam."""
+    ids, d, e, nf = fused_hop_l2(
+        vectors, cand_ids[None], query[None], beam_ids[None],
+        beam_dists[None], beam_exp[None], interpret=interpret)
+    return ids[0], d[0], e[0], nf[0]
+
+
+# ---------------------------------------------------------------------------
+# dist_fn-level hop backends — the plug core.beam_search dispatches on.
+#
+# A backend IS a dist_fn (callable (q, ids) -> dists, so catapult
+# entry-point scoring and any unfused fallback behave identically) that
+# additionally carries the table state the fused kernel gathers from and
+# exposes ``hop_batch`` — the whole-batch fused hop.  ``beam_search``
+# duck-types on ``is_fused_hop`` so core never imports kernels.
+# ---------------------------------------------------------------------------
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+class FusedL2Hop:
+    """Full-precision L2 hop backend over an HBM vector table."""
+
+    is_fused_hop = True
+
+    def __init__(self, vectors: jax.Array):
+        self.vectors = vectors
+
+    def __call__(self, q: jax.Array, ids: jax.Array) -> jax.Array:
+        x = self.vectors[jnp.maximum(ids, 0)]
+        d = jnp.sum(jnp.square(x - q[None, :]), axis=-1)
+        return jnp.where(ids < 0, jnp.inf, d)
+
+    def hop_batch(self, queries, cand_ids, beam_ids, beam_dists, beam_exp):
+        return fused_hop_l2(self.vectors, cand_ids, queries, beam_ids,
+                            beam_dists, beam_exp, interpret=not _on_tpu())
+
+
+class FusedPQHop:
+    """PQ-ADC hop backend over an HBM code table + per-query LUTs."""
+
+    is_fused_hop = True
+
+    def __init__(self, codebook, codes: jax.Array):
+        self.codebook = codebook
+        self.codes = codes
+
+    def _lut(self, q: jax.Array) -> jax.Array:
+        from repro.core.pq import query_lut    # lazy: kernels stay leaf-like
+        return query_lut(self.codebook, q)
+
+    def __call__(self, q: jax.Array, ids: jax.Array) -> jax.Array:
+        lut = self._lut(q)
+        c = self.codes[jnp.maximum(ids, 0)]
+        d = jnp.take_along_axis(
+            lut[None], c[:, :, None], axis=2)[:, :, 0].sum(-1)
+        return jnp.where(ids < 0, jnp.inf, d)
+
+    def hop_batch(self, queries, cand_ids, beam_ids, beam_dists, beam_exp):
+        luts = jax.vmap(self._lut)(queries)
+        return fused_hop_pq(luts, self.codes, cand_ids, beam_ids,
+                            beam_dists, beam_exp, interpret=not _on_tpu())

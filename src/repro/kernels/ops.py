@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.fused_hop import fused_hop_l2 as _fused_hop_l2
+from repro.kernels.fused_hop import fused_hop_pq as _fused_hop_pq
 from repro.kernels.gather_distance import gather_distance as _gather_distance
 from repro.kernels.l2_distance import l2_distance as _l2_distance
 from repro.kernels.lsh_hash import lsh_hash as _lsh_hash
@@ -108,8 +110,30 @@ def pq_adc(lut: jax.Array, codes: jax.Array, *, block_c: int = 128) -> jax.Array
         return _pq_adc_jit(lut, codes, block_c=block_c)
 
 
+def fused_hop_l2(vectors, cand_ids, queries, beam_ids, beam_dists, beam_exp):
+    """One fused L2 hop (gather + distance + beam merge) for a batch.
+
+    (N, d) table, (B, C) candidate ids, (B, d) queries, (B, L) beam ->
+    (new_ids, new_dists, new_exp, n_fresh).  No padding: the kernel is
+    shape-polymorphic over B/C/L (grid is one step per lane).
+    """
+    with annotate("repro.kernels.fused_hop_l2"):
+        return _fused_hop_l2(vectors, cand_ids, queries, beam_ids,
+                             beam_dists, beam_exp, interpret=not _on_tpu())
+
+
+def fused_hop_pq(luts, codes, cand_ids, beam_ids, beam_dists, beam_exp):
+    """One fused PQ-ADC hop: (B, M, K) LUTs, (N, M) codes, (B, C) ids,
+    (B, L) beam -> (new_ids, new_dists, new_exp, n_fresh)."""
+    with annotate("repro.kernels.fused_hop_pq"):
+        return _fused_hop_pq(luts, codes, cand_ids, beam_ids,
+                             beam_dists, beam_exp, interpret=not _on_tpu())
+
+
 # re-export oracles for convenience in tests/benchmarks
 l2_distance_ref = ref.l2_distance_ref
 gather_distance_ref = ref.gather_distance_ref
 lsh_hash_ref = ref.lsh_hash_ref
 pq_adc_ref = ref.pq_adc_ref
+fused_hop_ref = ref.fused_hop_ref
+fused_hop_pq_ref = ref.fused_hop_pq_ref

@@ -324,7 +324,8 @@ class DiskVectorSearchEngine(VectorSearchEngine):
         # the same L/k ≥ 3 regime reference DiskANN ships with.
         l = beam_width or max(3 * k, 24)
         spec = SearchSpec(beam_width=l, k=l,
-                          max_iters=max_iters or (4 * l + 64))
+                          max_iters=max_iters or (4 * l + 64),
+                          hop_backend=self.hop_backend)
         flabels = (jnp.asarray(filter_labels, jnp.int32)
                    if filter_labels is not None
                    else jnp.full((b,), -1, jnp.int32))

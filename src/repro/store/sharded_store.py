@@ -93,6 +93,8 @@ class ShardedDiskVectorSearchEngine:
     # I/O engine config, applied PER SHARD (each shard engine owns its
     # cache + pipeline); None = manifest value on load / sync default
     io: Optional[IoSpec] = None
+    # traversal hop implementation, applied PER SHARD ("unfused"/"fused")
+    hop_backend: str = "unfused"
 
     # populated by build()/load()
     shards: list = dataclasses.field(default_factory=list)
@@ -156,7 +158,7 @@ class ShardedDiskVectorSearchEngine:
                 pq_subspaces=self.pq_subspaces, seed=self.seed + s,
                 cache_frames=self.cache_frames, capacity=cap,
                 pin_catapult_destinations=self.pin_catapult_destinations,
-                io=self.io,
+                io=self.io, hop_backend=self.hop_backend,
                 store_path=os.path.join(self.store_dir, _shard_file(s)))
             if self.filtered:
                 eng.build(vectors[lo:hi], labels=labels[lo:hi],
@@ -433,7 +435,7 @@ class ShardedDiskVectorSearchEngine:
                 n_bits=self.n_bits, bucket_capacity=self.bucket_capacity,
                 seed=self.seed + s, cache_frames=self.cache_frames,
                 pin_catapult_destinations=self.pin_catapult_destinations,
-                io=self.io)
+                io=self.io, hop_backend=self.hop_backend)
             bpath = os.path.join(store_dir, _bucket_file(s))
             if mode == "catapult" and os.path.exists(bpath):
                 with np.load(bpath) as z:
