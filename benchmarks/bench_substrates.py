@@ -1,15 +1,30 @@
 """Index-agnosticism quantified: catapult gains over BOTH substrates the
-paper names (DiskANN/Vamana and HNSW), same workload, same layer."""
+paper names (DiskANN/Vamana and HNSW), same workload, same layer.
+
+Also home of the ``fig_tiered/*`` rows: the hot/cold tiered database
+against the pure-disk baseline on the same biased stream (hot-fraction
+sweep: p50 latency, cold block reads per query, recall), plus the
+workload-shift scenario pitting adaptive promotion against a frozen
+build-time hot set.  ``check_regression.py`` gates tiered recall within
+1pt of disk, tiered cold reads below pure-disk reads, and adaptive
+post-shift reads below frozen.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks.common import VP, make_db, stream
+from repro import db as catapultdb
+from repro.adapt import PolicyConfig
 from repro.core import brute_force_knn, recall_at_k
 from repro.core.hnsw import HnswEngine
-from repro.data.workloads import make_medrag_zipf
+from repro.data.workloads import make_medrag_zipf, make_shifted_zipf
 
 
 def run(n=8_000, n_queries=2_048, k=4) -> list[str]:
@@ -48,5 +63,156 @@ def run(n=8_000, n_queries=2_048, k=4) -> list[str]:
     return out
 
 
+# ------------------------------------------------------------ fig_tiered
+
+BATCH = 128
+# the maintainer cadence for CI-sized streams (the serving default is
+# sized for much longer runs)
+_POLICY = PolicyConfig(observe_every=1, baseline_every=8, min_batches=4)
+
+
+def _replay(db, q, k, *, maint=None, tick_every=2):
+    """Replay ``q`` in order; returns (ids, per-batch seconds)."""
+    beam = max(2 * k, 8)
+    ids_all, times = [], []
+    for i in range(q.shape[0] // BATCH):
+        qs = q[i * BATCH:(i + 1) * BATCH]
+        t0 = time.perf_counter()
+        ids, _, st = db.search(qs, k=k, beam_width=beam)
+        times.append(time.perf_counter() - t0)
+        ids_all.append(ids)
+        if maint is not None:
+            maint.observe(qs, st, np.ones(qs.shape[0], bool))
+            if (i + 1) % tick_every == 0:
+                maint.tick()
+    return np.concatenate(ids_all), np.asarray(times)
+
+
+def _measured(db, q, k, truth, scan):
+    """One measured window: p50 us/query, cold block reads/query, recall.
+
+    The maintainer is deliberately NOT running here — the hot set is
+    already formed by the warm phase, so the window measures steady
+    serving on every tier under identical conditions.  Each measured
+    batch is preceded by an untimed ``scan`` batch (full-corpus
+    co-traffic, identical for every database) that churns the cold
+    cache: a hot region that is merely cache-resident gets evicted and
+    re-read, a tier-pinned one does not — which is exactly the
+    difference under measurement."""
+    beam = max(2 * k, 8)
+    ids_all, times, r_total = [], [], 0
+    for i in range(q.shape[0] // BATCH):
+        db.search(scan, k=k, beam_width=beam)      # churn, not measured
+        qs = q[i * BATCH:(i + 1) * BATCH]
+        r0 = db.io_stats().block_reads
+        t0 = time.perf_counter()
+        ids, _, _ = db.search(qs, k=k, beam_width=beam)
+        times.append(time.perf_counter() - t0)
+        r_total += db.io_stats().block_reads - r0
+        ids_all.append(ids)
+    ids = np.concatenate(ids_all)
+    reads = r_total / ids.shape[0]
+    p50 = float(np.percentile(times, 50)) / BATCH * 1e6
+    return p50, reads, recall_at_k(ids, truth[:ids.shape[0]])
+
+
+def run_tiered(n=8_000, n_queries=2_048, k=4) -> list[str]:
+    """The tiered database's serving claim, quantified (fig_tiered rows).
+
+    One biased medrag-zipf stream, warm first half / measured second
+    half, with full-corpus scan co-traffic between measured batches (see
+    ``_measured``).  The pure-disk control and every tiered hot-fraction
+    share the corpus, the cache size, the co-traffic and the measured
+    window; the tiered databases additionally run a maintainer during
+    the warm phase so promotion has happened (and the hot region is
+    tier-pinned) before measurement.
+    """
+    cache_frames = max(128, n // 24)
+    wl = make_medrag_zipf(n=n, n_queries=n_queries)
+    q = wl.queries
+    half = (q.shape[0] // 2 // BATCH) * BATCH
+    truth = brute_force_knn(wl.corpus, q[half:], k)
+    rng = np.random.default_rng(7)
+    scan = (wl.corpus[rng.choice(n, BATCH, replace=False)]
+            + 0.1 * rng.normal(size=(BATCH, wl.corpus.shape[1]))
+            ).astype(np.float32)
+    out = []
+    with tempfile.TemporaryDirectory() as td:
+        db = make_db(wl, "catapult", tier="disk",
+                     store_path=os.path.join(td, "disk.ctpl"),
+                     cache_frames=cache_frames)
+        _replay(db, q[:half], k)                     # warm the cache
+        p50, reads, rec = _measured(db, q[half:], k, truth, scan)
+        db.close()
+        out.append(f"fig_tiered/disk/k{k},{p50:.1f},"
+                   f"recall={rec:.3f};block_reads={reads:.3f}")
+
+        for frac in (0.02, 0.05, 0.10):
+            db = make_db(wl, "catapult", tier="tiered",
+                         store_path=os.path.join(td, f"hot{frac}.d"),
+                         cache_frames=cache_frames,
+                         tiered=catapultdb.TieredSpec(
+                             hot_fraction=frac, promote_top=16,
+                             demote_after=1))
+            m = db.attach_maintainer(_POLICY)
+            _replay(db, q[:half], k, maint=m)        # warm + promote
+            eng = db.backend
+            s0, h0 = eng.searches, eng.hot_hits
+            p50, reads, rec = _measured(db, q[half:], k, truth, scan)
+            hot_hit = (eng.hot_hits - h0) / max(1, eng.searches - s0)
+            ts = eng.tier_stats()
+            out.append(
+                f"fig_tiered/hot{int(frac * 100):02d}/k{k},{p50:.1f},"
+                f"recall={rec:.3f};block_reads={reads:.3f};"
+                f"hot_hit={hot_hit:.3f};hot_rows={ts['hot_rows']};"
+                f"promotions={ts['promotions']}")
+            db.close()
+
+        # workload shift: adaptive promotion vs a frozen build-time hot
+        # set, measured on the LAST post-shift window (the adaptive
+        # database gets the first post-shift half to re-form its hot set)
+        swl = make_shifted_zipf(n=n, n_queries=n_queries, kind="sudden",
+                                seed=1)
+        shift = swl.meta["shift_point"]
+        post = swl.queries[shift:]
+        mid = (post.shape[0] // 2 // BATCH) * BATCH
+        truth_s = brute_force_knn(swl.corpus, post[mid:], k)
+        scan_s = (swl.corpus[rng.choice(n, BATCH, replace=False)]
+                  + 0.1 * rng.normal(size=(BATCH, swl.corpus.shape[1]))
+                  ).astype(np.float32)
+        for name, adaptive in (("frozen", False), ("adaptive", True)):
+            db = make_db(swl, "catapult", tier="tiered",
+                         store_path=os.path.join(td, f"shift_{name}.d"),
+                         cache_frames=cache_frames,
+                         tiered=catapultdb.TieredSpec(
+                             hot_fraction=0.05, promote_top=16,
+                             demote_after=1))
+            m = db.attach_maintainer(_POLICY) if adaptive else None
+            _replay(db, swl.queries[:shift], k, maint=m)   # pre-shift
+            _replay(db, post[:mid], k, maint=m)            # adaptation
+            p50, reads, rec = _measured(db, post[mid:], k, truth_s, scan_s)
+            extra = (f";promotions={db.backend.tier_stats()['promotions']}"
+                     if adaptive else "")
+            out.append(f"fig_tiered/shift/{name},{p50:.1f},"
+                       f"recall={rec:.3f};block_reads={reads:.3f}{extra}")
+            db.close()
+    return out
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    from benchmarks.bench_disk import rows_to_json
+
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true",
+                   help="CI-sized corpora (matches benchmarks.run --quick)")
+    p.add_argument("--json", default=None, metavar="PATH",
+                   help="also write structured results (regression gate)")
+    args = p.parse_args()
+    n, nq = (3_000, 1_024) if args.quick else (8_000, 2_048)
+    rows = run(n=n, n_queries=512 if args.quick else 2_048)
+    rows += run_tiered(n=n, n_queries=nq)
+    print("\n".join(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"corpus_n": n, "n_queries": nq,
+                       "results": rows_to_json(rows)}, f, indent=1)

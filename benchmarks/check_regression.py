@@ -51,7 +51,13 @@ regression can't hide behind a stale baseline file):
   measured dispatch count per hop must be exactly 1, the fused
   wall-clock must not exceed the composed per-lane kernel path on the
   interleaved repeat, and the outputs must match bit-for-bit
-  (allclose=1 under zero tolerance).
+  (allclose=1 under zero tolerance),
+* fig_tiered/*: the hot/cold tier's acceptance — every hot-fraction
+  row's recall within ``TIERED_PARITY_POINTS`` of the pure-disk
+  baseline AND its cold block reads per query strictly below the
+  pure-disk row's on the biased workload; on the shift scenario the
+  adaptive database's post-shift reads must undercut the frozen hot
+  set's (promotion has to BUY I/O, not just move rows).
 
 To re-baseline after an intentional perf change:
 
@@ -59,6 +65,8 @@ To re-baseline after an intentional perf change:
         --json benchmarks/baselines/disk_quick.json
     PYTHONPATH=src python -m benchmarks.bench_adapt --quick \
         --json benchmarks/baselines/adapt_quick.json
+    PYTHONPATH=src python -m benchmarks.bench_substrates --quick \
+        --json benchmarks/baselines/substrates_quick.json
 
 then re-add the ``gates`` key (see the committed files) and commit with
 the change that moved the numbers.
@@ -74,6 +82,7 @@ import sys
 RECALL_EPS = 0.005           # float-noise allowance across platforms
 MAX_READS_REGRESSION = 0.10  # +10% block reads = regression
 SHARD_PARITY_POINTS = 0.01   # S=4 within 1 recall point of S=1
+TIERED_PARITY_POINTS = 0.01  # tiered within 1 recall point of pure disk
 STATIONARY_OVERHEAD_MAX = 2.0  # % QPS the adapt layer may cost, absolute
 METRICS_OVERHEAD_MAX = 2.0   # % QPS the metrics registry may cost, absolute
 RECOVERY_SLACK = 1.5         # fresh recovery may take 1.5x the baseline's
@@ -263,6 +272,48 @@ def check(current: dict, baseline: dict) -> list[str]:
     elif (adaptive is None) != (frozen is None):
         failures.append(
             "fig7_adapt/sudden rows present but adaptive/frozen pair "
+            "incomplete")
+
+    # fig_tiered acceptance, fresh run: every hot-fraction row must match
+    # the pure-disk baseline's recall (within 1pt) while strictly cutting
+    # its cold block reads per query — serving hot rows from RAM and
+    # tier-pinning them out of the cold fetch path has to show up as I/O
+    t_rows = {name: m for name, m in cur.items()
+              if name.startswith("fig_tiered/")}
+    t_disk = [m for name, m in t_rows.items()
+              if name.startswith("fig_tiered/disk/")]
+    t_hot = {name: m for name, m in t_rows.items()
+             if name.startswith("fig_tiered/hot")}
+    if t_disk and t_hot:
+        d = t_disk[0]
+        for name, m in sorted(t_hot.items()):
+            if m["recall"] < d["recall"] - TIERED_PARITY_POINTS:
+                failures.append(
+                    f"{name}: tiered recall {m['recall']:.3f} < pure-disk "
+                    f"{d['recall']:.3f} - {TIERED_PARITY_POINTS} — the hot "
+                    f"tier is changing answers, not just serving them")
+            if m["block_reads"] >= d["block_reads"]:
+                failures.append(
+                    f"{name}: tiered cold block reads "
+                    f"{m['block_reads']:.3f}/query >= pure-disk "
+                    f"{d['block_reads']:.3f}/query on the biased workload "
+                    f"— the hot tier is not paying for itself in I/O")
+    elif t_rows and (bool(t_disk) != bool(t_hot)):
+        failures.append(
+            "fig_tiered rows present but disk-baseline/hot-sweep pair "
+            "incomplete")
+    t_frozen = cur.get("fig_tiered/shift/frozen")
+    t_adapt = cur.get("fig_tiered/shift/adaptive")
+    if t_frozen is not None and t_adapt is not None:
+        if t_adapt["block_reads"] >= t_frozen["block_reads"]:
+            failures.append(
+                f"tiered shift: adaptive post-shift reads "
+                f"{t_adapt['block_reads']:.3f}/query >= frozen hot set's "
+                f"{t_frozen['block_reads']:.3f}/query — promotion is not "
+                f"reducing cold I/O after the shift")
+    elif (t_frozen is None) != (t_adapt is None):
+        failures.append(
+            "fig_tiered/shift rows present but frozen/adaptive pair "
             "incomplete")
 
     # kernel_fused acceptance, fresh run: one dispatch per hop, fused

@@ -63,7 +63,9 @@ def make_db(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
             seed=0, tier: str = "ram", store_path: str | None = None,
             cache_frames: int = 2048, n_shards: int = 2,
             spare_capacity: int = 0, io: catapultdb.IoSpec | None = None,
-            warm_batch_shapes: tuple = ()) -> catapultdb.Database:
+            warm_batch_shapes: tuple = (),
+            tiered: catapultdb.TieredSpec | None = None
+            ) -> catapultdb.Database:
     """The one database factory every benchmark uses: same workload,
     any tier, constructed only through ``repro.db.create``.  Unlabeled
     single-store builds share one Vamana graph per workload (the
@@ -73,10 +75,11 @@ def make_db(wl: Workload, mode: str, *, n_bits=8, bucket_capacity=40,
         bucket_capacity=bucket_capacity, seed=seed,
         cache_frames=cache_frames, n_shards=n_shards,
         spare_capacity=spare_capacity, filters=wl.labels is not None,
-        io=io, warm_batch_shapes=warm_batch_shapes)
+        io=io, warm_batch_shapes=warm_batch_shapes, tiered=tiered)
     if wl.labels is not None:
         return catapultdb.create(spec, wl.corpus, labels=wl.labels)
-    prebuilt = shared_graph(wl) if tier != "sharded" else None
+    # prebuilt graphs are single-store only (sharded/tiered build their own)
+    prebuilt = shared_graph(wl) if tier not in ("sharded", "tiered") else None
     return catapultdb.create(spec, wl.corpus, prebuilt=prebuilt)
 
 

@@ -6,6 +6,10 @@ Prints markdown to stdout (pasted into EXPERIMENTS.md).
 ``--obs PATH`` additionally renders the per-stage search-time breakdown
 (route / fetch / rerank, from the ``explain=True`` traces) out of a
 ``bench_obs --json`` artifact.
+
+``--tiered PATH`` renders the hot/cold tier table (hot-fraction sweep +
+shift scenario, vs the pure-disk baseline) out of a ``bench_substrates
+--json`` artifact's ``fig_tiered/*`` rows.
 """
 from __future__ import annotations
 
@@ -48,6 +52,45 @@ def obs_breakdown(path: str) -> None:
               f"| {pct['rerank']:.0f} | {parity} |")
 
 
+def tiered_table(path: str) -> None:
+    """Markdown table: the hot/cold tier vs the pure-disk baseline.
+
+    Reads a bench_substrates artifact's ``fig_tiered/*`` rows — the
+    hot-fraction sweep plus the workload-shift pair — and prints p50
+    latency, cold block reads per query (with the saving vs pure disk),
+    recall and hot-tier residency, so the report answers 'what does a
+    RAM hot tier buy at each size?' in one table.
+    """
+    with open(path) as f:
+        results = json.load(f)["results"]
+    rows = {name: m for name, m in results.items()
+            if name.startswith("fig_tiered/")}
+    if not rows:
+        print(f"(no fig_tiered rows in {path})")
+        return
+    disk = next((m for name, m in rows.items()
+                 if name.startswith("fig_tiered/disk/")), None)
+    print("| config | p50 us/q | cold reads/q | reads saved | recall | "
+          "hot rows | hot-hit | promotions |")
+    print("|---|---|---|---|---|---|---|---|")
+    for name, m in sorted(rows.items()):
+        cfg = "/".join(name.split("/")[1:])
+        reads = m.get("block_reads")
+        saving = "—"
+        if (disk is not None and reads is not None
+                and not name.startswith("fig_tiered/disk/")
+                and disk.get("block_reads")):
+            saving = f"{(1.0 - reads / disk['block_reads']) * 100:+.0f}%"
+        cells = [f"{m.get('us_per_call', 0.0):.0f}",
+                 f"{reads:.3f}" if reads is not None else "—",
+                 saving,
+                 f"{m.get('recall', 0.0):.3f}",
+                 f"{m['hot_rows']:.0f}" if "hot_rows" in m else "—",
+                 f"{m['hot_hit']:.1%}" if "hot_hit" in m else "—",
+                 f"{m['promotions']:.0f}" if "promotions" in m else "—"]
+        print(f"| {cfg} | " + " | ".join(cells) + " |")
+
+
 def fmt_s(x):
     if x is None:
         return "—"
@@ -63,10 +106,16 @@ def main() -> None:
     p.add_argument("--obs", default=None, metavar="PATH",
                    help="bench_obs --json artifact: also render the "
                         "per-stage trace breakdown")
+    p.add_argument("--tiered", default=None, metavar="PATH",
+                   help="bench_substrates --json artifact: also render "
+                        "the hot/cold tier table (fig_tiered rows)")
     args = p.parse_args()
 
     if args.obs:
         obs_breakdown(args.obs)
+        print()
+    if args.tiered:
+        tiered_table(args.tiered)
         print()
 
     rows = []

@@ -10,8 +10,18 @@ maintainer from the spec's adapt policy — printing windowed win-rate
 and block reads per query as adaptation kicks in.
 
     PYTHONPATH=src python examples/workload_shift.py
+
+With ``tiered`` on the command line the same stream runs against the
+hot/cold tiered database instead: the maintainer is then a
+``TieredMaintainer``, so each tick also promotes the measured hot rows
+into RAM, and the table grows tier-residency columns — hot-row count
+and hot-hit fraction — showing the hot set re-forming around the new
+popular region after the shift.
+
+    PYTHONPATH=src python examples/workload_shift.py tiered
 """
 import os
+import sys
 import tempfile
 
 from repro import db as catapultdb
@@ -19,24 +29,29 @@ from repro.adapt import PolicyConfig
 from repro.data.workloads import make_shifted_zipf
 
 BATCH = 64
+TIERED = "tiered" in sys.argv[1:]
 wl = make_shifted_zipf(n=2_000, n_queries=1_536, kind="sudden", seed=1)
 shift = wl.meta["shift_point"]
 
 with tempfile.TemporaryDirectory() as td:
-    db = catapultdb.create(
-        catapultdb.IndexSpec(
-            tier="disk", path=os.path.join(td, "shift.ctpl"),
-            degree=16, build_beam=32, seed=0, cache_frames=128, k=8,
-            adapt=PolicyConfig(observe_every=1, baseline_every=8,
-                               min_batches=4),
-            adapt_tick_every=2),
-        wl.corpus)
+    spec = catapultdb.IndexSpec(
+        tier="tiered" if TIERED else "disk",
+        path=os.path.join(td, "shift.d" if TIERED else "shift.ctpl"),
+        degree=16, build_beam=32, seed=0, cache_frames=128, k=8,
+        adapt=PolicyConfig(observe_every=1, baseline_every=8,
+                           min_batches=4),
+        adapt_tick_every=2,
+        tiered=(catapultdb.TieredSpec(hot_fraction=0.05, promote_top=8)
+                if TIERED else None))
+    db = catapultdb.create(spec, wl.corpus)
     # serving + adaptation in one line: frontend + attached maintainer
+    # (a TieredMaintainer on the tiered backend — same attach point)
     fe = db.serve(max_batch=BATCH)
     maintainer = fe.maintainer
 
+    res_hdr = f" {'hot':>6} {'hot-hit':>8}" if TIERED else ""
     print(f"{'queries':>8} {'phase':>6} {'win':>6} {'reads/q':>8} "
-          f"{'drift':>6} {'flushes':>8}")
+          f"{'drift':>6} {'flushes':>8}{res_hdr}")
     n = (wl.queries.shape[0] // BATCH) * BATCH
     for lo in range(0, n, BATCH):
         for q in wl.queries[lo: lo + BATCH]:
@@ -46,14 +61,26 @@ with tempfile.TemporaryDirectory() as td:
             s = maintainer.snapshot()
             cs = db.io_stats()
             phase = "pre" if lo + BATCH <= shift else "post"
+            res = ""
+            if TIERED:
+                ts = db.backend.tier_stats()
+                res = (f" {ts['hot_rows']:>6} "
+                       f"{ts['hot_hit_fraction']:>8.1%}")
             print(f"{lo + BATCH:>8} {phase:>6} {s['win_ewma']:>6.3f} "
                   f"{cs.block_reads / (lo + BATCH):>8.2f} "
-                  f"{s['drift']:>6.3f} {s['drift_flushes']:>8}")
+                  f"{s['drift']:>6.3f} {s['drift_flushes']:>8}{res}")
     s = maintainer.snapshot()
     print(f"\nadaptation summary: drift flushes={s['drift_flushes']} "
           f"(cleared {s['flushed_entries']} stale shortcuts), "
           f"TTL evictions={s['ttl_evicted']}, "
           f"shadow batches={s['shadows']}")
+    if TIERED:
+        ts = db.backend.tier_stats()
+        print(f"tier residency: {ts['hot_rows']}/{ts['hot_capacity']} hot "
+              f"rows after {ts['promotions']} promotions / "
+              f"{ts['demotions']} demotions "
+              f"({ts['hot_rebuilds']} rebuilds); lifetime hot-hit "
+              f"fraction {ts['hot_hit_fraction']:.1%}")
     # serving health from the frontend's rolling window (repro.obs):
     # the same numbers db.metrics() exports as catapultdb_serve_*
     w = fe.window.snapshot()

@@ -4,9 +4,10 @@ The paper sells catapults as a *transparent* layer: the search
 algorithm, the feature set (filtered search, dynamic insertion, disk
 residence) and the serving story are unchanged whichever tier holds the
 index.  This package is that transparency as an API: one declarative
-``IndexSpec`` selects RAM / single-disk / sharded-disk, ``create`` and
-``open`` are the only constructors, and the returned ``Database``
-exposes the whole feature matrix behind a ``caps`` record.
+``IndexSpec`` selects RAM / single-disk / sharded-disk / hot-cold
+tiered, ``create`` and ``open`` are the only constructors, and the
+returned ``Database`` exposes the whole feature matrix behind a
+``caps`` record.
 
     from repro import db as catapultdb
 
@@ -32,12 +33,12 @@ regenerate after an intentional change with
 from repro.db.database import Database
 from repro.db.factory import create, open, sniff
 from repro.db.spec import (CapabilityError, Caps, IndexSpec, IoSpec,
-                           SearchRequest, SearchResult)
+                           SearchRequest, SearchResult, TieredSpec)
 from repro.obs import SearchTrace
 from repro.store.cache import IoStats
 
 __all__ = [
     "CapabilityError", "Caps", "Database", "IndexSpec", "IoSpec", "IoStats",
-    "SearchRequest", "SearchResult", "SearchTrace", "create", "open",
-    "sniff",
+    "SearchRequest", "SearchResult", "SearchTrace", "TieredSpec", "create",
+    "open", "sniff",
 ]

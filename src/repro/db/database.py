@@ -1,9 +1,10 @@
 """The ``Database`` facade — one object, the whole feature set, any tier.
 
 A ``Database`` wraps exactly one internal engine (RAM
-``VectorSearchEngine``, single-store ``DiskVectorSearchEngine``, or
-scatter-gather ``ShardedDiskVectorSearchEngine``) behind the paper's
-transparency claim: the caller never learns which tier answered.  The
+``VectorSearchEngine``, single-store ``DiskVectorSearchEngine``,
+scatter-gather ``ShardedDiskVectorSearchEngine``, or hot/cold
+``TieredVectorSearchEngine``) behind the paper's transparency claim:
+the caller never learns which tier answered.  The
 methods ARE the feature matrix — ``search`` (filtered, per-request
 k/beam, publish opt-out), ``upsert``/``delete``/``consolidate``
 (mutable tiers), ``save`` (persistent tiers), ``serve`` (micro-batching
@@ -105,6 +106,13 @@ class Database:
 
         reg.register_collector(io_collector)
         reg.register_collector(adapt_collector)
+
+        if hasattr(self.backend, "tier_stats"):
+            def tier_collector() -> dict:
+                return {f"catapultdb_tier_{key}": float(v)
+                        for key, v in self.backend.tier_stats().items()}
+
+            reg.register_collector(tier_collector)
 
     def _record_search(self, batch: int, ms: float, stats,
                        explained: bool) -> None:
@@ -222,7 +230,7 @@ class Database:
         Tier-uniform: the RAM engine grows into its preallocated
         capacity, the disk store writes blocks through the cache, the
         sharded tier routes to the least-loaded shard."""
-        self._need("mutable", "upsert")
+        self._need("mutable", "upsert()")
         if labels is not None and not self.caps.filtered:
             raise CapabilityError("labels on an unfiltered index")
         if labels is None and self.caps.filtered:
@@ -236,12 +244,12 @@ class Database:
     def delete(self, ids: np.ndarray) -> None:
         """Tombstone ``ids``; catapult buckets flushed of the dead
         destinations, medoid/label entries re-elected as needed."""
-        self._need("mutable", "delete")
+        self._need("mutable", "delete()")
         self.backend.delete(ids)
 
     def consolidate(self) -> int:
         """FreshVamana compaction pass; returns repaired row count."""
-        self._need("mutable", "consolidate")
+        self._need("mutable", "consolidate()")
         return self.backend.consolidate()
 
     # ---------------------------------------------------------------- persist
@@ -249,7 +257,7 @@ class Database:
         """Flush every persisted structure (blocks, tombstones, label
         entries, catapult buckets + adapt telemetry where live) so
         ``repro.db.open(spec.path)`` resumes this exact state."""
-        self._need("persistent", "save")
+        self._need("persistent", "save()")
         self.backend.save()
 
     def close(self) -> None:
@@ -289,14 +297,21 @@ class Database:
         return fe
 
     def attach_maintainer(self, policy=None, tick_every: Optional[int] = None):
-        """Create (and remember) a ``CatapultMaintainer`` over the
-        backend — resumes any adapt telemetry a reopened index carried."""
+        """Create (and remember) the right maintainer over the backend —
+        ``TieredMaintainer`` on the tiered tier (catapult maintenance +
+        hot/cold rebalancing in one tick), ``CatapultMaintainer``
+        elsewhere; resumes any adapt telemetry a reopened index carried.
+        """
         from repro.adapt import CatapultMaintainer
         if self.backend.mode != "catapult":
             raise CapabilityError(
                 f"maintainer needs mode='catapult', this database is "
                 f"{self.backend.mode!r}")
-        self.maintainer = CatapultMaintainer(
+        cls = CatapultMaintainer
+        if self.caps.tier == "tiered":
+            from repro.tiered import TieredMaintainer
+            cls = TieredMaintainer
+        self.maintainer = cls(
             self.backend, policy or self.spec.adapt,
             tick_every=tick_every or self.spec.adapt_tick_every)
         return self.maintainer
@@ -354,18 +369,14 @@ class Database:
     @property
     def vectors(self) -> np.ndarray:
         """Host view of the active rows — ground-truth material for
-        benches/tests (single-store tiers only)."""
-        if self.caps.sharded:
-            raise CapabilityError("per-row host views are per-shard on "
-                                  "the sharded tier")
+        benches/tests (``caps.host_views`` tiers only)."""
+        self._need("host_views", "db.vectors")
         return self.backend._vec_np[: self.backend.n_active]
 
     @property
     def tombstones(self) -> np.ndarray:
-        """Tombstone flags for the active rows (single-store tiers)."""
-        if self.caps.sharded:
-            raise CapabilityError("per-row host views are per-shard on "
-                                  "the sharded tier")
+        """Tombstone flags for the active rows (``caps.host_views``)."""
+        self._need("host_views", "db.tombstones")
         return self.backend._tomb_np[: self.backend.n_active]
 
     # ---------------------------------------------------------------- I/O
@@ -405,7 +416,10 @@ class Database:
         return self.backend.cache_stats
 
     def _need(self, cap: str, op: str) -> None:
+        """Raise ``CapabilityError`` naming the ACTUAL tier when ``caps``
+        lacks ``cap`` — tier-agnostic by construction, so a future tier
+        that drops a capability gets a correct message for free."""
         if not getattr(self.caps, cap):
             raise CapabilityError(
-                f"{op}() needs the {cap!r} capability, which the "
+                f"{op} needs the {cap!r} capability, which the "
                 f"{self.caps.tier!r} tier of this database lacks")

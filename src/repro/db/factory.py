@@ -4,8 +4,9 @@
 tier the spec names; ``open(path)`` reopens a persisted one, sniffing
 what is on disk — a single CTPL block file (any persisted version,
 v1/v2/v3) opens as the single-store disk tier, a sharded manifest
-directory opens as the scatter-gather tier — so callers never encode
-tier knowledge in their own code.  Both return a ``Database`` and both
+directory opens as the scatter-gather tier, a tiered manifest directory
+opens as the hot/cold tiered database — so callers never encode tier
+knowledge in their own code.  Both return a ``Database`` and both
 run the spec's jit pre-warm before handing it back: by the time the
 caller holds the handle, the declared batch shapes are compiled.
 """
@@ -25,18 +26,33 @@ from repro.db.spec import Caps, IndexSpec
 
 
 def sniff(path: str) -> tuple[str, int]:
-    """Identify what a path holds: ``('sharded', manifest_version)`` for
-    a manifest directory, ``('disk', ctpl_version)`` for a CTPL block
-    file.  Raises ``FileNotFoundError``/``ValueError`` otherwise."""
+    """Identify what a path holds: ``('tiered', manifest_version)`` for
+    a hot/cold tiered layout, ``('sharded', manifest_version)`` for a
+    shard manifest directory, ``('disk', ctpl_version)`` for a CTPL
+    block file.  Raises ``FileNotFoundError``/``ValueError`` otherwise.
+    """
     if os.path.isdir(path):
-        # the jax-heavy engine module only loads on the directory branch
-        # — exactly the case where open() imports it anyway
+        # the jax-heavy engine modules only load on the directory branch
+        # — exactly the case where open() imports them anyway
         from repro.store.sharded_store import (MANIFEST_FORMAT,
                                                MANIFEST_NAME)
+        from repro.tiered.engine import (TIERED_FORMAT,
+                                         TIERED_MANIFEST_NAME)
+        # tiered outranks sharded: a tiered layout CONTAINS a sharded
+        # manifest when its cold tier is sharded (under cold.d/), but
+        # the reverse never happens, so the tiered sniff must win
+        tpath = os.path.join(path, TIERED_MANIFEST_NAME)
+        if os.path.exists(tpath):
+            with builtins.open(tpath) as f:
+                manifest = json.load(f)
+            if manifest.get("format") != TIERED_FORMAT:
+                raise ValueError(f"unrecognized tiered manifest format "
+                                 f"{manifest.get('format')!r} in {path!r}")
+            return "tiered", int(manifest.get("version", 0))
         mpath = os.path.join(path, MANIFEST_NAME)
         if not os.path.exists(mpath):
-            raise ValueError(f"directory without a {MANIFEST_NAME}: "
-                             f"{path!r}")
+            raise ValueError(f"directory without a {TIERED_MANIFEST_NAME} "
+                             f"or {MANIFEST_NAME}: {path!r}")
         with builtins.open(mpath) as f:     # this module defines open()
             manifest = json.load(f)
         if manifest.get("format") != MANIFEST_FORMAT:
@@ -55,9 +71,10 @@ def sniff(path: str) -> tuple[str, int]:
     return "disk", version
 
 
-def _caps(tier: str, filtered: bool) -> Caps:
+def _caps(tier: str, filtered: bool, host_views: bool = True) -> Caps:
     return Caps(tier=tier, mutable=True, filtered=bool(filtered),
-                persistent=tier != "ram", sharded=tier == "sharded")
+                persistent=tier != "ram", sharded=tier == "sharded",
+                host_views=bool(host_views))
 
 
 def create(spec: IndexSpec, vectors: np.ndarray,
@@ -80,9 +97,9 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             "IndexSpec(filters=True) needs per-row labels at create() "
             "(and labels need filters=True)")
     n_labels = int(labels.max()) + 1 if labels is not None else None
-    if prebuilt is not None and spec.tier == "sharded":
+    if prebuilt is not None and spec.tier in ("sharded", "tiered"):
         raise ValueError("prebuilt graphs are single-store only — each "
-                         "shard builds over its own row slice")
+                         "shard/tier builds over its own row set")
 
     if spec.tier == "ram":
         from repro.core.engine import VectorSearchEngine
@@ -103,6 +120,19 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             hop_backend=spec.hop_backend, store_path=spec.path)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   prebuilt=prebuilt)
+    elif spec.tier == "tiered":
+        from repro.db.spec import TieredSpec
+        from repro.tiered import TieredVectorSearchEngine
+        cfg = spec.tiered or TieredSpec()
+        eng = TieredVectorSearchEngine(
+            store_dir=spec.path, mode=spec.mode, vamana=spec.vamana(),
+            n_bits=spec.n_bits, bucket_capacity=spec.bucket_capacity,
+            pq_subspaces=spec.pq, seed=spec.seed,
+            cache_frames=spec.cache_frames, n_shards=spec.n_shards,
+            io=spec.io, hop_backend=spec.hop_backend, tiered=cfg)
+        eng.build(vectors, labels=labels, n_labels=n_labels,
+                  spare_capacity=spec.spare_capacity)
+        spec = dataclasses.replace(spec, tiered=cfg)
     else:
         from repro.store.sharded_store import ShardedDiskVectorSearchEngine
         eng = ShardedDiskVectorSearchEngine(
@@ -114,9 +144,23 @@ def create(spec: IndexSpec, vectors: np.ndarray,
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   spare_capacity=spec.spare_capacity)
 
-    db = Database(eng, spec, _caps(spec.tier, labels is not None))
+    db = Database(eng, spec,
+                  _caps(spec.tier, labels is not None,
+                        host_views=_host_views(spec.tier, eng)))
     db.warm()
     return db
+
+
+def _host_views(tier: str, eng) -> bool:
+    """Per-row host views (``db.vectors``/``db.tombstones``) exist when
+    ONE engine owns the whole row range: any single store, or a tiered
+    database over a single-store cold tier.  Shard facades keep their
+    rows per-shard."""
+    if tier == "sharded":
+        return False
+    if tier == "tiered":
+        return eng.tiered.cold_tier != "sharded"
+    return True
 
 
 def open(path: str, *, mode: Optional[str] = None,
@@ -140,7 +184,11 @@ def open(path: str, *, mode: Optional[str] = None,
     # runtime.io overrides it
     kwargs = dict(vamana=runtime.vamana(), cache_frames=runtime.cache_frames,
                   io=runtime.io, hop_backend=runtime.hop_backend)
-    if tier == "sharded":
+    if tier == "tiered":
+        from repro.tiered import TieredVectorSearchEngine
+        eng = TieredVectorSearchEngine.load(path, mode=mode,
+                                            tiered=runtime.tiered, **kwargs)
+    elif tier == "sharded":
         from repro.store.sharded_store import ShardedDiskVectorSearchEngine
         eng = ShardedDiskVectorSearchEngine.load(path, mode=mode, **kwargs)
     else:
@@ -160,7 +208,9 @@ def open(path: str, *, mode: Optional[str] = None,
         bucket_capacity=eng.bucket_capacity, seed=eng.seed,
         n_shards=getattr(eng, "n_shards", runtime.n_shards),
         io=getattr(eng, "io", runtime.io),
-        hop_backend=getattr(eng, "hop_backend", runtime.hop_backend))
-    db = Database(eng, opened, _caps(tier, eng.filtered))
+        hop_backend=getattr(eng, "hop_backend", runtime.hop_backend),
+        tiered=(eng.tiered if tier == "tiered" else runtime.tiered))
+    db = Database(eng, opened, _caps(tier, eng.filtered,
+                                     host_views=_host_views(tier, eng)))
     db.warm()
     return db

@@ -31,8 +31,9 @@ from repro.adapt.policy import PolicyConfig
 from repro.core.engine import SearchStats
 from repro.core.vamana import VamanaParams
 
-TIERS = ("ram", "disk", "sharded")
+TIERS = ("ram", "disk", "sharded", "tiered")
 MODES = ("catapult", "diskann", "lsh_apg")
+COLD_TIERS = ("disk", "sharded")
 
 
 class CapabilityError(RuntimeError):
@@ -101,13 +102,73 @@ class IoSpec:
         return cls(**{k: v for k, v in d.items() if k in known})
 
 
+@dataclasses.dataclass(frozen=True)
+class TieredSpec:
+    """Hot/cold tiered-database configuration (``IndexSpec.tiered``).
+
+    The tiered tier serves a RAM ``VectorSearchEngine`` over the HOT
+    rows in front of a cold disk index holding the whole corpus (the
+    cold store is the canonical home of every row — global ids are cold
+    ids, so promotion/demotion never renumbers anything).
+
+    * ``hot_fraction``/``hot_capacity`` size the hot set: ``hot_capacity``
+      (rows) wins when set, else ``ceil(hot_fraction * n)`` at
+      ``create()``.
+    * ``cold_tier`` picks the cold backend: ``'disk'`` (one CTPL file)
+      or ``'sharded'`` (a manifest directory, ``IndexSpec.n_shards``).
+    * ``promote_top`` — hot buckets consulted per maintainer rebalance;
+      their live catapult destinations are the promotion candidates.
+    * ``demote_after`` — rebalances a hot row survives without
+      re-appearing in the candidate set before it is demotable (the
+      decayed-traffic signal).
+    * ``pin_cold`` — keep the hot rows tier-pinned in the cold cache so
+      the cold tier's block fetch path never pays disk reads for rows
+      the RAM tier already serves.
+
+    Persisted in the ``tiered.json`` manifest, so a plain ``open()``
+    resumes the layout the index was created with.
+    """
+    hot_fraction: float = 0.1
+    hot_capacity: Optional[int] = None
+    cold_tier: str = "disk"
+    promote_top: int = 16
+    demote_after: int = 2
+    pin_cold: bool = True
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.hot_fraction <= 1.0):
+            raise ValueError(f"tiered.hot_fraction must be in (0, 1], "
+                             f"got {self.hot_fraction}")
+        if self.hot_capacity is not None and self.hot_capacity < 1:
+            raise ValueError(f"tiered.hot_capacity must be >= 1, "
+                             f"got {self.hot_capacity}")
+        if self.cold_tier not in COLD_TIERS:
+            raise ValueError(f"tiered.cold_tier must be one of "
+                             f"{COLD_TIERS}, got {self.cold_tier!r}")
+        if self.promote_top < 1:
+            raise ValueError(f"tiered.promote_top must be >= 1, "
+                             f"got {self.promote_top}")
+        if self.demote_after < 1:
+            raise ValueError(f"tiered.demote_after must be >= 1, "
+                             f"got {self.demote_after}")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TieredSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
 class Caps(NamedTuple):
     """What this database can do — probe instead of type-sniffing."""
-    tier: str            # 'ram' | 'disk' | 'sharded'
+    tier: str            # 'ram' | 'disk' | 'sharded' | 'tiered'
     mutable: bool        # upsert / delete / consolidate
     filtered: bool       # built with labels: filtered search available
     persistent: bool     # save() / reopen via repro.db.open()
     sharded: bool        # scatter-gather over >1 shard
+    host_views: bool = True  # db.vectors / db.tombstones available
 
 
 @dataclasses.dataclass(frozen=True)
@@ -129,12 +190,15 @@ class IndexSpec:
       somewhere to land.
 
     Tier selection:
-      ``tier='ram'`` needs no path; 'disk' and 'sharded' require
-      ``path`` (a .ctpl file / a manifest directory).  ``n_shards``
-      only applies to the sharded tier.  ``io`` configures the disk
-      tiers' I/O engine (async pipeline, prefetch, cache admission —
-      see ``IoSpec``); ``None`` selects the synchronous default and
-      ``open()`` resumes whatever the index persisted.
+      ``tier='ram'`` needs no path; 'disk', 'sharded' and 'tiered'
+      require ``path`` (a .ctpl file / a manifest directory).
+      ``n_shards`` applies to the sharded tier (and a tiered database
+      whose ``tiered.cold_tier='sharded'``).  ``io`` configures the
+      disk tiers' I/O engine (async pipeline, prefetch, cache
+      admission — see ``IoSpec``); ``None`` selects the synchronous
+      default and ``open()`` resumes whatever the index persisted.
+      ``tiered`` configures the hot/cold tier (hot-set sizing,
+      promotion policy — see ``TieredSpec``).
 
     Serving defaults + adaptation:
       ``k``/``beam_width`` are the DEFAULTS a request can override
@@ -164,6 +228,9 @@ class IndexSpec:
     # disk tiers
     cache_frames: int = 2048
     n_shards: int = 2
+    # hot/cold tiered tier (None = TieredSpec() defaults); persisted in
+    # the tiered.json manifest and resumed by open()
+    tiered: Optional[TieredSpec] = None
     # disk I/O engine (None = the synchronous default, IoSpec());
     # persisted with the index and resumed by open()
     io: Optional[IoSpec] = None
@@ -206,6 +273,10 @@ class IndexSpec:
         if self.io is not None and not isinstance(self.io, IoSpec):
             raise ValueError(f"io must be an IoSpec (or None for the "
                              f"synchronous default), got {type(self.io)}")
+        if self.tiered is not None and not isinstance(self.tiered,
+                                                      TieredSpec):
+            raise ValueError(f"tiered must be a TieredSpec (or None for "
+                             f"the defaults), got {type(self.tiered)}")
         if self.hop_backend not in HOP_BACKENDS:
             raise ValueError(f"hop_backend must be one of {HOP_BACKENDS}, "
                              f"got {self.hop_backend!r}")

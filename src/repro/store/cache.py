@@ -129,6 +129,13 @@ class NodeCache:
                               self.max_pinned)
         self._rotating: deque[int] = deque()     # FIFO of soft-pinned nodes
         self._rotating_set: set[int] = set()
+        # tier pins: the tiered database's hot-row set, replaced
+        # wholesale by set_tier_pins(); applied to resident frames
+        # immediately and to future installs lazily (_install), so
+        # pinning never costs a block read of its own
+        self._hard_pins: set[int] = set()
+        self._tier_pins: set[int] = set()
+        self.tier_pin_budget = max(1, capacity // 2)
         # concurrency: ONE condition guards every frame-table and counter
         # mutation; actual store reads happen outside it (see _resolve)
         self._cond = threading.Condition(threading.RLock())
@@ -203,6 +210,11 @@ class NodeCache:
                          if self.admission == "locality" else 0)
         if speculative:
             self._spec_resident.add(node)
+        # a hot-tier resident landing in a frame stays pinned (lazy half
+        # of set_tier_pins) — ceiling-guarded so CLOCK keeps victims
+        if node in self._tier_pins \
+                and int(self.pinned.sum()) < self.max_pinned:
+            self.pinned[f] = True
         return f
 
     # ------------------------------------------------------------ resolution
@@ -417,6 +429,7 @@ class NodeCache:
             with self._cond:
                 if int(self.pinned.sum()) >= self.max_pinned:
                     return
+                self._hard_pins.add(node)
                 f = self.frame_of.get(node)
             if f is None:
                 self._resolve(node)
@@ -443,7 +456,8 @@ class NodeCache:
                     old = self._rotating.popleft()
                     self._rotating_set.discard(old)
                     fo = self.frame_of.get(old)
-                    if fo is not None:
+                    if fo is not None and old not in self._tier_pins \
+                            and old not in self._hard_pins:
                         self.pinned[fo] = False
                 f = self.frame_of.get(node)
             if f is None:
@@ -455,6 +469,37 @@ class NodeCache:
                 self.pinned[f] = True
                 self._rotating.append(node)
                 self._rotating_set.add(node)
+
+    def set_tier_pins(self, node_ids) -> None:
+        """Replace the tier-pin set wholesale (the tiered database's hot
+        rows, re-pinned after every rebalance).
+
+        Unlike ``pin``/``pin_rotating`` this NEVER issues a block read:
+        members already resident are pinned now; the rest pin lazily
+        when a demand fetch or prefetch installs them (``_install``).
+        Bounded by ``tier_pin_budget`` (half the frame pool) and the
+        hard ``max_pinned`` ceiling, so CLOCK always finds a victim.
+        Rows leaving the set unpin unless a hard or rotating pin also
+        holds their frame.
+        """
+        ids = np.atleast_1d(np.asarray(node_ids, np.int64)).ravel()
+        new = {int(n) for n in ids if n >= 0}
+        if len(new) > self.tier_pin_budget:
+            # deterministic truncation; callers wanting priority order
+            # should pre-truncate before handing the set over
+            new = set(sorted(new)[: self.tier_pin_budget])
+        with self._cond:
+            for node in self._tier_pins - new:
+                f = self.frame_of.get(node)
+                if f is not None and node not in self._hard_pins \
+                        and node not in self._rotating_set:
+                    self.pinned[f] = False
+            self._tier_pins = new
+            for node in new:
+                f = self.frame_of.get(node)
+                if f is not None \
+                        and int(self.pinned.sum()) < self.max_pinned:
+                    self.pinned[f] = True
 
     # ------------------------------------------------------------ maintenance
     def invalidate(self) -> None:

@@ -1,0 +1,15 @@
+"""Hot/cold tiered database: RAM-resident hot rows over a cold disk
+index, one engine protocol, locality-driven promotion (see
+``docs/TIERING.md``)."""
+from repro.tiered.engine import (TIERED_FORMAT, TIERED_MANIFEST_NAME,
+                                 TIERED_VERSION,
+                                 TieredVectorSearchEngine)
+from repro.tiered.maintainer import TieredMaintainer
+
+__all__ = [
+    "TieredVectorSearchEngine",
+    "TieredMaintainer",
+    "TIERED_FORMAT",
+    "TIERED_MANIFEST_NAME",
+    "TIERED_VERSION",
+]

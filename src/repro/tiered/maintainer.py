@@ -1,0 +1,50 @@
+"""TieredMaintainer — one tick for catapults AND memory residence.
+
+The same decayed bucket histograms that aim catapults decide which rows
+deserve RAM.  ``TieredMaintainer`` therefore *is* a
+``CatapultMaintainer`` — the tiered engine's ``shards`` property hands
+the base class the cold units (the engines that own LSH planes, bucket
+tables and telemetry), so observe/fold, TTL eviction, drift flushes and
+the utility gate all run unchanged over the cold tier.  The subclass
+adds exactly one step to the tick: ``TieredVectorSearchEngine.
+rebalance()``, which promotes the hottest live destinations into the
+RAM tier and demotes rows the stream has abandoned.
+
+Ordering matters: the rebalance runs AFTER the base maintenance, so a
+drift flush that just evicted a shifted region's stale shortcuts also
+keeps its dead destinations out of the promotion candidates — the hot
+set tracks the *new* regime on the same tick that the catapult table
+does.
+"""
+from __future__ import annotations
+
+from repro.adapt import policy as pol
+from repro.adapt.maintainer import CatapultMaintainer
+
+
+class TieredMaintainer(CatapultMaintainer):
+    """Catapult maintenance + hot/cold rebalancing in one tick."""
+
+    def __init__(self, engine, policy: pol.PolicyConfig | None = None,
+                 tick_every: int = 32):
+        if not hasattr(engine, "rebalance"):
+            raise ValueError("TieredMaintainer wraps a tiered engine "
+                             "(needs .rebalance()); got "
+                             f"{type(engine).__name__}")
+        super().__init__(engine, policy=policy, tick_every=tick_every)
+        self.tiered = engine
+
+    def _tick_locked(self) -> None:
+        super()._tick_locked()
+        self.tiered.rebalance()
+        # the base tick already appended its snapshot; refresh it so the
+        # history row carries this tick's residency, not last tick's
+        if self.history:
+            self.history[-1] = self.snapshot()
+
+    def snapshot(self) -> dict:
+        """Base telemetry + tier residency, one flat dict (the benches
+        and ``examples/workload_shift.py`` scrape it per window)."""
+        snap = super().snapshot()
+        snap.update(self.tiered.tier_stats())
+        return snap

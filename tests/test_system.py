@@ -81,6 +81,47 @@ class TestFeatureMatrix:
                               filter_labels=np.zeros(32, np.int32))  # filtering
         assert np.all(labels[np.maximum(ids, 0)][ids >= 0] == 0)
 
+    def test_tiered_supports_everything(self, tmp_path):
+        """The tiered tier joins the feature matrix at FULL width:
+        accelerated search, filtering, insertion, deletion, compaction,
+        persistence and serving — one facade, hot/cold underneath."""
+        data, centers, assign = make_clustered(800, 16, 8, seed=83)
+        labels = (assign % 3).astype(np.int32)
+        path = str(tmp_path / "fm.d")
+        db = catapultdb.create(
+            dataclasses.replace(
+                SPEC, tier="tiered", mode="catapult", filters=True,
+                spare_capacity=200, path=path,
+                tiered=catapultdb.TieredSpec(hot_fraction=0.1)),
+            data, labels=labels)
+        assert (db.caps.mutable and db.caps.filtered and db.caps.persistent
+                and db.caps.host_views and not db.caps.sharded)
+        q = (data[:32] + 0.01).astype(np.float32)
+        db.search(q, k=2, beam_width=8)
+        _, _, st = db.search(q, k=2, beam_width=8)
+        assert st.used.mean() > 0.8                      # accelerated (LSH)
+        assert st.block_reads is not None                # cold tier visible
+        db.upsert(data[:8] + 20.0, labels=np.zeros(8, np.int32))  # insertions
+        ids, _, _ = db.search(q, k=2, beam_width=8,
+                              filter_labels=np.zeros(32, np.int32))  # filtering
+        assert np.all(labels[np.maximum(ids, 0)][ids >= 0] == 0)
+        victim = int(ids[ids >= 0][0])
+        db.delete(np.asarray([victim]))                  # deletion
+        ids2, _, _ = db.search(q, k=2, beam_width=8,
+                               filter_labels=np.zeros(32, np.int32))
+        assert victim not in set(ids2.ravel().tolist())
+        assert db.consolidate() >= 0                     # compaction
+        # tier-uniform observability: residency rides into db.metrics()
+        m = db.metrics()
+        assert m["catapultdb_tier_hot_rows"] > 0
+        tr = db.search(q[:1], k=2, explain=True)         # per-tier spans
+        assert {s["name"] for s in tr.shards} == {"hot", "cold"}
+        db.save()                                        # persistence
+        db.close()
+        re = catapultdb.open(path)
+        assert re.caps.tier == "tiered" and re.caps.filtered
+        re.close()
+
     def test_lsh_apg_lacks_filtering(self):
         """LSH-APG's entry table is filter-oblivious by construction: its
         entries may violate any predicate (that is the paper's critique) —

@@ -1,0 +1,232 @@
+"""Hot/cold tiered database: the subsystem's own contract.
+
+Cross-tier parity and durability live in ``test_disk_mutations.py`` and
+the feature matrix in ``test_system.py``; this file pins the tiered
+mechanics themselves — the stable global-id indirection across
+promotion/demotion, the cache's tier-pin semantics, the locality-driven
+rebalance actually moving the measured hot rows (and cutting cold block
+reads versus a frozen hot set), sniff precedence for the directory
+layout, and the spec/caps plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import db as catapultdb
+from repro.db.spec import TieredSpec
+from repro.store import layout
+from repro.store.cache import NodeCache
+
+from conftest import make_clustered
+
+SPEC = catapultdb.IndexSpec(degree=16, build_beam=32, build_batch=512,
+                            seed=0, cache_frames=128)
+
+
+# ---------------------------------------------------------------- spec
+
+def test_tiered_spec_validation():
+    with pytest.raises(ValueError):
+        TieredSpec(hot_fraction=0.0)
+    with pytest.raises(ValueError):
+        TieredSpec(hot_fraction=1.5)
+    with pytest.raises(ValueError):
+        TieredSpec(hot_capacity=0)
+    with pytest.raises(ValueError):
+        TieredSpec(cold_tier="ram")      # hot tier already IS ram
+    with pytest.raises(ValueError):
+        TieredSpec(promote_top=0)
+    # round-trips through the manifest dict form
+    cfg = TieredSpec(hot_fraction=0.2, cold_tier="sharded", demote_after=3)
+    assert TieredSpec.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(ValueError):
+        catapultdb.IndexSpec(tier="tiered", path="x.d", tiered="not-a-spec")
+    with pytest.raises(ValueError):
+        catapultdb.IndexSpec(tier="tiered")      # persistent tiers need path
+
+
+# ---------------------------------------------------------------- cache
+
+def _tiny_store(tmp_path, n=32, d=4, r=4):
+    rng = np.random.default_rng(1)
+    vecs = rng.normal(size=(n, d)).astype(np.float32)
+    adj = rng.integers(0, n, size=(n, r)).astype(np.int32)
+    return layout.write_store(str(tmp_path / "tiny.ctpl"), vecs, adj,
+                              medoid=0)
+
+
+def test_set_tier_pins_is_lazy_and_survives_pressure(tmp_path):
+    cache = NodeCache(_tiny_store(tmp_path), capacity=4)
+    before = cache.block_reads
+    cache.set_tier_pins([0, 1])
+    assert cache.block_reads == before, "tier pinning must not read blocks"
+    cache.fetch([0, 1])                      # now resident -> pinned
+    for lo in range(2, 30, 4):               # heavy eviction pressure
+        cache.fetch(np.arange(lo, lo + 4) % 32)
+    _, _, hits, misses = cache.fetch([0, 1])
+    assert (hits, misses) == (2, 0), "tier-pinned rows were evicted"
+
+
+def test_set_tier_pins_wholesale_swap_releases_old_members(tmp_path):
+    cache = NodeCache(_tiny_store(tmp_path), capacity=4)
+    cache.set_tier_pins([0, 1])
+    cache.fetch([0, 1])
+    cache.set_tier_pins([2, 3])              # 0,1 leave the hot set
+    cache.fetch([2, 3])
+    for lo in range(4, 24, 4):
+        cache.fetch(np.arange(lo, lo + 4))
+    _, _, hits, misses = cache.fetch([2, 3])
+    assert (hits, misses) == (2, 0)
+    # the demoted rows became ordinary eviction victims
+    assert not ({0, 1} & set(cache.frame_of))
+
+
+def test_set_tier_pins_budget_truncates_deterministically(tmp_path):
+    cache = NodeCache(_tiny_store(tmp_path), capacity=4)
+    assert cache.tier_pin_budget == 2        # half the frame pool
+    cache.set_tier_pins([5, 9, 3, 7])
+    assert cache._tier_pins == {3, 5}        # sorted prefix
+
+
+# ---------------------------------------------------------------- ids
+
+@pytest.fixture(scope="module")
+def biased_world():
+    data, centers, assign = make_clustered(900, 16, 12, seed=31)
+    rng = np.random.default_rng(32)
+    # all traffic lands in ONE cluster — the strongest locality signal
+    hot_cluster = 4
+    q = (centers[hot_cluster]
+         + 0.25 * rng.normal(size=(256, 16))).astype(np.float32)
+    return data, q, assign, hot_cluster
+
+
+def test_ids_bit_stable_across_promotion_and_demotion(biased_world,
+                                                      tmp_path):
+    """The acceptance criterion verbatim: global ids never change when
+    rows move between tiers.  Answers to the same queries are compared
+    id-for-id and distance-for-distance across rebalances that
+    measurably promoted rows."""
+    data, q, _, _ = biased_world
+    db = catapultdb.create(
+        dataclasses.replace(SPEC, tier="tiered", mode="catapult",
+                            path=str(tmp_path / "t.d"),
+                            tiered=TieredSpec(hot_fraction=0.05,
+                                              promote_top=8,
+                                              demote_after=1)),
+        data)
+    ids0, d0, _ = db.search(q, k=5, beam_width=16)
+    m = db.attach_maintainer()
+    eng = db.backend
+    for _ in range(6):                      # telemetry + rebalances
+        _, _, st = db.search(q, k=5, beam_width=16)
+        m.observe(q, st, np.ones(q.shape[0], bool))
+        m.tick()
+    assert eng.promotions > 0, "biased stream must promote rows"
+    ids1, d1, _ = db.search(q, k=5, beam_width=16)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1), rtol=1e-5)
+    # and the promoted rows really are the measured hot region
+    hot_gids = np.asarray(sorted(eng._hot_slot))
+    returned = np.unique(np.asarray(ids1)[np.asarray(ids1) >= 0])
+    # (a loose floor: the hot set also keeps its build-time sample
+    # until capacity pressure demotes it, so overlap is partial)
+    assert np.isin(returned, hot_gids).mean() > 0.25
+    db.close()
+
+
+def test_promotions_cut_cold_block_reads_vs_frozen_hot_set(biased_world,
+                                                           tmp_path):
+    """The I/O claim behind the tier: after the maintainer promotes the
+    measured hot region (and tier-pins it in the cold cache), the cold
+    tier's block reads per query drop below an identical database whose
+    hot set stays frozen at its build-time sample."""
+    data, q, _, _ = biased_world
+    def spec(name):
+        return dataclasses.replace(
+            SPEC, cache_frames=64, tier="tiered", mode="catapult",
+            path=str(tmp_path / name),
+            tiered=TieredSpec(hot_fraction=0.06, promote_top=12,
+                              demote_after=1))
+
+    frozen = catapultdb.create(spec("frozen.d"), data)
+    adaptive = catapultdb.create(spec("adapt.d"), data)
+    m = adaptive.attach_maintainer()
+    for db, maint in ((frozen, None), (adaptive, m)):
+        for _ in range(4):                  # warm phase (adapt learns)
+            _, _, st = db.search(q, k=5, beam_width=16)
+            if maint is not None:
+                maint.observe(q, st, np.ones(q.shape[0], bool))
+                maint.tick()
+    assert adaptive.backend.promotions > 0
+    # background scans churn the 64-frame cache between hot batches —
+    # the frozen database re-reads the hot region every time, while the
+    # adaptive one tier-pinned it out of the eviction pool
+    rng = np.random.default_rng(5)
+    scan = data[rng.choice(data.shape[0], 96, replace=False)]
+    reads = {}
+    for name, db in (("frozen", frozen), ("adaptive", adaptive)):
+        total = 0
+        for _ in range(3):
+            db.search(scan, k=5, beam_width=16)
+            before = db.io_stats().block_reads
+            db.search(q, k=5, beam_width=16)
+            total += db.io_stats().block_reads - before
+        reads[name] = total / (3 * q.shape[0])
+    assert reads["adaptive"] < reads["frozen"], reads
+    frozen.close()
+    adaptive.close()
+
+
+# ---------------------------------------------------------------- facade
+
+def test_sniff_prefers_tiered_manifest_over_nested_sharded(tmp_path):
+    """A tiered layout with a sharded cold tier CONTAINS a sharded
+    manifest (under cold.d/) — sniff must still say tiered, and open()
+    must reassemble the whole stack, not just the cold half."""
+    data, _, _ = make_clustered(400, 8, 4, seed=33)
+    path = str(tmp_path / "ts.d")
+    db = catapultdb.create(
+        dataclasses.replace(SPEC, tier="tiered", n_shards=2, path=path,
+                            tiered=TieredSpec(hot_fraction=0.1,
+                                              cold_tier="sharded")),
+        data)
+    db.save()
+    db.close()
+    assert catapultdb.sniff(path)[0] == "tiered"
+    re = catapultdb.open(path)
+    assert re.caps.tier == "tiered" and not re.caps.host_views
+    assert re.spec.tiered.cold_tier == "sharded"
+    re.close()
+
+
+def test_capability_error_names_the_actual_tier(tmp_path):
+    """Satellite regression: the host-view refusal must name the tier it
+    refused for, not hardcode 'sharded'."""
+    data, _, _ = make_clustered(300, 8, 4, seed=34)
+    db = catapultdb.create(
+        dataclasses.replace(SPEC, tier="tiered", n_shards=2,
+                            path=str(tmp_path / "cv.d"),
+                            tiered=TieredSpec(cold_tier="sharded")),
+        data)
+    with pytest.raises(catapultdb.CapabilityError, match="'tiered'"):
+        db.vectors
+    with pytest.raises(catapultdb.CapabilityError, match="'tiered'"):
+        db.tombstones
+    db.close()
+    sh = catapultdb.create(
+        dataclasses.replace(SPEC, tier="sharded", n_shards=2,
+                            path=str(tmp_path / "cs.d")), data)
+    with pytest.raises(catapultdb.CapabilityError, match="'sharded'"):
+        sh.vectors
+    sh.close()
+    # single-store cold tier keeps the whole-range host views
+    td = catapultdb.create(
+        dataclasses.replace(SPEC, tier="tiered",
+                            path=str(tmp_path / "cd.d"),
+                            tiered=TieredSpec()), data)
+    assert td.caps.host_views and td.vectors.shape[0] == td.n_active
+    td.close()
