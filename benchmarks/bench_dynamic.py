@@ -136,20 +136,100 @@ def run_disk(n=4_000, n_queries=1_024, k=8, insert_batch=200,
     return out
 
 
+def run_ingest(n=2_500, n_queries=512, k=8, chunk=125) -> list[str]:
+    """fig_ingest/* — ingest-while-serving from an EMPTY database.
+
+    Per tier (ram / disk / sharded): ``create(spec)`` with no vectors,
+    then stream the whole corpus through an ``IngestQueue`` while the
+    serving frontend answers the Zipf query stream — ingest rides the
+    flush cadence, so every row reports the insert rate achieved UNDER
+    serving and the serving p99 achieved UNDER ingest.  After the
+    queue drains, ``recall`` (row space, via the resolved ticket gids)
+    is compared against ``batch_recall`` — a batch-built twin of the
+    same spec — which check_regression.py holds within 1 point: the
+    streamed graph must be as good as the one-shot build.
+    """
+    import dataclasses
+
+    from repro import db as catapultdb
+
+    wl = make_medrag_zipf(n=n, n_queries=n_queries, d=24)
+    truth = brute_force_knn(wl.corpus, wl.queries, k)
+    out = []
+    for tier in ("ram", "disk", "sharded"):
+        with tempfile.TemporaryDirectory() as td:
+            spec = catapultdb.IndexSpec(
+                mode="catapult", tier=tier, dim=wl.corpus.shape[1],
+                degree=16, build_beam=32, seed=0, cache_frames=256,
+                n_shards=2,
+                path=(os.path.join(td, "ing") if tier != "ram" else None),
+                ingest=catapultdb.IngestSpec(
+                    bootstrap_cutover=256, batch_size=chunk,
+                    initial_capacity=n))       # sized: growth out of frame
+            db = catapultdb.create(spec)
+            fe = db.serve(max_batch=64, ingest=True)
+            tickets = []
+            lat_ms = []
+            qpos = 0
+            t0 = time.perf_counter()
+            for lo in range(0, n, chunk):
+                tickets.append(
+                    (lo, fe.ingest.put(wl.corpus[lo: lo + chunk])))
+                q = wl.queries[qpos % n_queries: qpos % n_queries + 64]
+                qpos += 64
+                ts = time.perf_counter()
+                fe.search(q, k=k, beam_width=4 * k)   # pumps the queue
+                lat_ms.append((time.perf_counter() - ts) * 1e3)
+            fe.ingest.flush()
+            wall = time.perf_counter() - t0
+            rate = n / wall
+            p99_us = float(np.percentile(lat_ms, 99)) * 1e3 / 64
+
+            gids = np.concatenate([t.gids for _, t in tickets])
+            row_of = np.empty(int(gids.max()) + 1, np.int64)
+            row_of[gids] = np.arange(n)
+            ids, _, _ = db.search(wl.queries, k=k, beam_width=4 * k)
+            rows = np.where(np.asarray(ids) >= 0,
+                            row_of[np.clip(ids, 0, row_of.shape[0] - 1)],
+                            -1)
+            r_stream = recall_at_k(rows, truth)
+            db.close()
+
+            twin = catapultdb.create(
+                dataclasses.replace(
+                    spec, ingest=None,
+                    path=(os.path.join(td, "twin")
+                          if tier != "ram" else None)),
+                wl.corpus)
+            ids_t, _, _ = twin.search(wl.queries, k=k, beam_width=4 * k)
+            r_batch = recall_at_k(np.asarray(ids_t), truth)
+            twin.close()
+            out.append(
+                f"fig_ingest/{wl.name}/{tier},{p99_us:.1f},"
+                f"insert_rate_rps={rate:.1f};serve_p99_us={p99_us:.1f};"
+                f"recall={r_stream:.3f};batch_recall={r_batch:.3f}")
+    return out
+
+
 def _main() -> None:
     p = argparse.ArgumentParser()
-    p.add_argument("--backend", choices=("ram", "disk"), default="ram")
+    p.add_argument("--backend", choices=("ram", "disk", "ingest", "all"),
+                   default="ram")
     p.add_argument("--quick", action="store_true",
                    help="CI-sized corpora (matches benchmarks.run --quick)")
     p.add_argument("--json", default=None, metavar="PATH",
                    help="also write structured results (regression gate)")
     args = p.parse_args()
-    if args.backend == "disk":
-        rows = run_disk(n=3_000 if args.quick else 8_000,
-                        n_queries=512 if args.quick else 2_048)
-    else:
-        rows = run(n=4_000 if args.quick else 6_000,
-                   n_queries=512 if args.quick else 1_000)
+    rows = []
+    if args.backend in ("ram", "all"):
+        rows += run(n=4_000 if args.quick else 6_000,
+                    n_queries=512 if args.quick else 1_000)
+    if args.backend in ("disk", "all"):
+        rows += run_disk(n=3_000 if args.quick else 8_000,
+                         n_queries=512 if args.quick else 2_048)
+    if args.backend in ("ingest", "all"):
+        rows += run_ingest(n=2_500 if args.quick else 6_000,
+                           n_queries=512 if args.quick else 1_024)
     print("\n".join(rows))
     if args.json:
         from benchmarks.bench_disk import rows_to_json

@@ -57,7 +57,12 @@ regression can't hide behind a stale baseline file):
   baseline AND its cold block reads per query strictly below the
   pure-disk row's on the biased workload; on the shift scenario the
   adaptive database's post-shift reads must undercut the frozen hot
-  set's (promotion has to BUY I/O, not just move rows).
+  set's (promotion has to BUY I/O, not just move rows),
+* fig_ingest/*: the streaming-ingest acceptance — every tier's
+  ingest-while-serving recall within ``INGEST_PARITY_POINTS`` of the
+  batch-built twin on the same corpus, with a non-zero insert rate
+  sustained under serving (the stream must build a graph as good as
+  the one-shot build, not a degraded approximation of it).
 
 To re-baseline after an intentional perf change:
 
@@ -67,6 +72,8 @@ To re-baseline after an intentional perf change:
         --json benchmarks/baselines/adapt_quick.json
     PYTHONPATH=src python -m benchmarks.bench_substrates --quick \
         --json benchmarks/baselines/substrates_quick.json
+    PYTHONPATH=src python -m benchmarks.bench_dynamic --quick \
+        --backend all --json benchmarks/baselines/dynamic_quick.json
 
 then re-add the ``gates`` key (see the committed files) and commit with
 the change that moved the numbers.
@@ -83,6 +90,7 @@ RECALL_EPS = 0.005           # float-noise allowance across platforms
 MAX_READS_REGRESSION = 0.10  # +10% block reads = regression
 SHARD_PARITY_POINTS = 0.01   # S=4 within 1 recall point of S=1
 TIERED_PARITY_POINTS = 0.01  # tiered within 1 recall point of pure disk
+INGEST_PARITY_POINTS = 0.0101  # streamed build within 1pt of batch twin
 STATIONARY_OVERHEAD_MAX = 2.0  # % QPS the adapt layer may cost, absolute
 METRICS_OVERHEAD_MAX = 2.0   # % QPS the metrics registry may cost, absolute
 RECOVERY_SLACK = 1.5         # fresh recovery may take 1.5x the baseline's
@@ -344,6 +352,32 @@ def check(current: dict, baseline: dict) -> list[str]:
                 f"{name}: fused hop output differs from the composed "
                 f"path (allclose={m.get('allclose')}) — bit-identity "
                 f"broken")
+
+    # fig_ingest acceptance, fresh run: a database born empty and fed
+    # the corpus through the queue WHILE serving must end up with a
+    # graph as good as the one-shot batch build of the same spec, and
+    # must actually have ingested under load.  Baseline rows pin the
+    # section: dropping a tier from the bench fails, not passes.
+    for name in base:
+        if name.startswith("fig_ingest/") and name not in cur:
+            failures.append(f"{name}: ingest row missing from fresh run")
+    for name, m in sorted(cur.items()):
+        if not name.startswith("fig_ingest/"):
+            continue
+        r, rb = m.get("recall"), m.get("batch_recall")
+        if r is None or rb is None:
+            failures.append(f"{name}: recall/batch_recall pair missing")
+        elif r < rb - INGEST_PARITY_POINTS:
+            failures.append(
+                f"{name}: streamed recall {r:.3f} < batch twin "
+                f"{rb:.3f} - {INGEST_PARITY_POINTS} — ingest-while-"
+                f"serving is building a worse graph than the batch "
+                f"build it must match")
+        if not m.get("insert_rate_rps", 0.0) > 0.0:
+            failures.append(
+                f"{name}: insert_rate_rps="
+                f"{m.get('insert_rate_rps')} — no rows ingested under "
+                f"serving, the interleave is vacuous")
     return failures
 
 

@@ -49,7 +49,9 @@ class CatapultMaintainer:
     """Drift-aware maintenance over one catapult engine (any tier)."""
 
     def __init__(self, engine, policy: pol.PolicyConfig | None = None,
-                 tick_every: int = 32):
+                 tick_every: int = 32,
+                 consolidate_threshold: float = 0.0,
+                 mutate_lock=None):
         if getattr(engine, "mode", None) != "catapult":
             raise ValueError(
                 f"maintainer needs a catapult-mode engine, got "
@@ -57,6 +59,14 @@ class CatapultMaintainer:
         self.engine = engine
         self.policy = policy or pol.PolicyConfig()
         self.tick_every = tick_every
+        # > 0: each tick checks the tombstone fraction and runs a
+        # background consolidate() when it crosses the threshold
+        # (serialized against the facade's mutations via mutate_lock;
+        # the disk tiers' consolidate additionally drains in-flight
+        # async I/O first, so it is safe under live search traffic)
+        self.consolidate_threshold = float(consolidate_threshold)
+        self.mutate_lock = mutate_lock
+        self.consolidations = 0
         # sharded facade -> per-shard units; single engines are their own
         self._units = list(getattr(engine, "shards", None) or [engine])
         for unit in self._units:
@@ -243,9 +253,42 @@ class CatapultMaintainer:
                 self._off_batches = 0
                 self.gate_transitions += 1
                 self._set_engines(False)
+        self._maybe_consolidate()
         self.history.append(self.snapshot())
         if len(self.history) > HISTORY_LIMIT:
             del self.history[: len(self.history) - HISTORY_LIMIT]
+
+    def _maybe_consolidate(self) -> None:
+        if self.consolidate_threshold <= 0.0:
+            return
+        frac = self._tombstone_fraction()
+        if frac < self.consolidate_threshold:
+            self._consolidated_at = -1.0
+            return
+        # an in-place graph splice (batch-built engines) repairs edges
+        # without lowering the fraction; don't re-splice every tick at
+        # an unchanged fraction — wait for new deletes to accumulate
+        if frac <= getattr(self, "_consolidated_at", -1.0):
+            return
+        lock = self.mutate_lock
+        if lock is not None:
+            with lock:
+                self.engine.consolidate()
+        else:
+            self.engine.consolidate()
+        self.consolidations += 1
+        self._consolidated_at = self._tombstone_fraction()
+
+    def _tombstone_fraction(self) -> float:
+        own = getattr(self.engine, "tombstone_fraction", None)
+        if own is not None:
+            return float(own())
+        dead = n = 0
+        for unit in self._units:
+            na = int(unit.n_active)
+            dead += int(unit._tomb_np[:na].sum())
+            n += na
+        return dead / n if n else 0.0
 
     # ---------------------------------------------------------------- thread
     def start(self, interval: float = 0.5) -> None:
@@ -296,4 +339,5 @@ class CatapultMaintainer:
             "probes": self.probes,
             "shadows": self.shadows,
             "ticks": self.ticks,
+            "consolidations": self.consolidations,
         }

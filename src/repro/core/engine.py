@@ -307,6 +307,12 @@ class VectorSearchEngine:
         from repro.store.cache import ZERO_IO_STATS   # lazy: import cycle
         return ZERO_IO_STATS
 
+    def tombstone_fraction(self) -> float:
+        """Dead-row share of the active range — the maintainer's
+        background-consolidate trigger signal."""
+        n = int(self.n_active)
+        return float(self._tomb_np[:n].sum()) / n if n else 0.0
+
     # ---------------------------------------------------------------- search
     def search(self, queries: np.ndarray, k: int,
                beam_width: int | None = None,

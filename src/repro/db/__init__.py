@@ -32,13 +32,13 @@ regenerate after an intentional change with
 """
 from repro.db.database import Database
 from repro.db.factory import create, open, sniff
-from repro.db.spec import (CapabilityError, Caps, IndexSpec, IoSpec,
-                           SearchRequest, SearchResult, TieredSpec)
+from repro.db.spec import (CapabilityError, Caps, IndexSpec, IngestSpec,
+                           IoSpec, SearchRequest, SearchResult, TieredSpec)
 from repro.obs import SearchTrace
 from repro.store.cache import IoStats
 
 __all__ = [
-    "CapabilityError", "Caps", "Database", "IndexSpec", "IoSpec", "IoStats",
-    "SearchRequest", "SearchResult", "SearchTrace", "TieredSpec", "create",
-    "open", "sniff",
+    "CapabilityError", "Caps", "Database", "IndexSpec", "IngestSpec",
+    "IoSpec", "IoStats", "SearchRequest", "SearchResult", "SearchTrace",
+    "TieredSpec", "create", "open", "sniff",
 ]

@@ -28,14 +28,15 @@ readouts — a scrape of the aggregates, or one query's full trace.
 """
 from __future__ import annotations
 
+import threading
 import time
 import warnings
 from typing import Optional
 
 import numpy as np
 
-from repro.db.spec import (CapabilityError, Caps, IndexSpec, SearchRequest,
-                           SearchResult)
+from repro.db.spec import (CapabilityError, Caps, IndexSpec, IngestSpec,
+                           SearchRequest, SearchResult)
 from repro.obs import MetricsRegistry, TraceRecorder, build_search_trace
 
 # batch-mean hop counts per search — graph-walk lengths, not latencies
@@ -46,13 +47,18 @@ class Database:
     """Tier-agnostic CatapultDB handle; construct via ``repro.db.create``
     or ``repro.db.open``, never directly."""
 
-    def __init__(self, backend, spec: IndexSpec, caps: Caps):
+    def __init__(self, backend, spec: IndexSpec, caps: Caps, keymap=None):
         self.backend = backend       # the internal engine (stable API)
         self.spec = spec
         self.caps = caps
         self.maintainer = None       # set by serve()/attach_maintainer()
         self.last_warm_ms: Optional[float] = None
         self.last_warm_breakdown: dict = {}   # {batch_shape: ms}
+        # ALL mutations (upsert/delete/consolidate, maintainer ticks,
+        # ingest-queue pumps) serialize here; searches stay lock-free
+        # against the engines' snapshot-consistent state
+        self._mutate_lock = threading.RLock()
+        self._keymap = keymap        # caller-key ↔ gid map (lazy)
         self.registry = MetricsRegistry(enabled=spec.metrics)
         self._wire_metrics()
 
@@ -72,6 +78,11 @@ class Database:
         self._m_won = reg.counter("catapultdb_catapult_won_total")
         self._m_block_reads = reg.counter("catapultdb_io_block_reads_total")
         self._m_cache_hits = reg.counter("catapultdb_io_cache_hits_total")
+        self._m_ing_rows = reg.counter("catapultdb_ingest_rows_total")
+        self._m_ing_batches = reg.counter("catapultdb_ingest_batches_total")
+        self._m_ing_reupserts = reg.counter(
+            "catapultdb_ingest_reupserts_total")
+        self._m_ing_deletes = reg.counter("catapultdb_ingest_deletes_total")
         if not reg.enabled:
             return
 
@@ -104,8 +115,18 @@ class Database:
                     if isinstance(v, (bool, int, float, np.bool_,
                                       np.integer, np.floating))}
 
+        def ingest_collector() -> dict:
+            out = {"catapultdb_ingest_keys":
+                       float(len(self._keymap) if self._keymap else 0)}
+            stats = getattr(self.backend, "ingest_stats", None)
+            if stats is not None:
+                out.update({f"catapultdb_ingest_{key}": float(v)
+                            for key, v in stats().items()})
+            return out
+
         reg.register_collector(io_collector)
         reg.register_collector(adapt_collector)
+        reg.register_collector(ingest_collector)
 
         if hasattr(self.backend, "tier_stats"):
             def tier_collector() -> dict:
@@ -224,8 +245,23 @@ class Database:
 
     # ---------------------------------------------------------------- mutate
     def upsert(self, vectors: np.ndarray,
-               labels: Optional[np.ndarray] = None) -> np.ndarray:
-        """Insert a batch; returns the assigned ids (stable forever).
+               labels: Optional[np.ndarray] = None, *,
+               keys=None) -> np.ndarray:
+        """Insert a batch; returns the assigned ids IN CALLER ORDER
+        (stable forever), on every tier.
+
+        ``keys``: caller-chosen row identities (all-int or all-str per
+        database, one per row).  A key already present performs a TRUE
+        upsert — the new row is inserted, then the old row is
+        tombstoned — so ``search`` never returns both versions and the
+        key is never absent mid-upsert.  The key↔gid map persists with
+        the index (``save``/``open``).
+
+        When the spec carries ``ingest.locality_group`` (every
+        bootstrapped database does), the batch is Slipstream-style
+        locality grouped before graph insertion — sorted by an LSH code
+        so near rows link sequentially — and the returned gids are
+        un-permuted back to caller order.
 
         Tier-uniform: the RAM engine grows into its preallocated
         capacity, the disk store writes blocks through the cache, the
@@ -238,27 +274,137 @@ class Database:
             # that category's filtered results — same strictness as
             # create(filters=True)
             raise ValueError("a filtered index needs labels on upsert()")
-        return self.backend.insert_batch(
-            np.ascontiguousarray(vectors, np.float32), labels)
+        vectors = np.ascontiguousarray(vectors, np.float32)
+        if vectors.ndim == 1:
+            vectors = vectors[None, :]
+        b = vectors.shape[0]
+        if keys is not None and len(keys) != b:
+            raise ValueError(f"{len(keys)} keys for {b} rows")
+        ing = self.spec.ingest
+        with self._mutate_lock:
+            order = None
+            if ing is not None and ing.locality_group and b > 2:
+                from repro.ingest.queue import locality_order
+                order = locality_order(vectors, seed=self.spec.seed)
+                vectors = vectors[order]
+                if labels is not None:
+                    labels = np.asarray(labels)[order]
+            gids = np.asarray(
+                self.backend.insert_batch(vectors, labels), np.int64)
+            if order is not None:
+                unperm = np.empty(b, np.int64)
+                unperm[order] = gids     # gid of caller row order[i]
+                gids = unperm
+            replaced = 0
+            if keys is not None:
+                old = self._ensure_keymap().assign(keys, gids)
+                stale = old[old >= 0]
+                if stale.size:
+                    # true upsert: the replaced rows die AFTER the new
+                    # ones landed
+                    self.backend.delete(stale)
+                    replaced = int(stale.size)
+        if self.registry.enabled:
+            self._m_ing_rows.inc(b)
+            self._m_ing_batches.inc()
+            if replaced:
+                self._m_ing_reupserts.inc(replaced)
+        return gids
 
-    def delete(self, ids: np.ndarray) -> None:
-        """Tombstone ``ids``; catapult buckets flushed of the dead
-        destinations, medoid/label entries re-elected as needed."""
+    def delete(self, ids: Optional[np.ndarray] = None, *,
+               keys=None) -> None:
+        """Tombstone rows by gid — or by caller key (exactly one of
+        ``ids``/``keys``; unknown keys raise ``KeyError``).  Catapult
+        buckets are flushed of the dead destinations, medoid/label
+        entries re-elected as needed."""
         self._need("mutable", "delete()")
-        self.backend.delete(ids)
+        if (ids is None) == (keys is None):
+            raise TypeError("delete() takes exactly one of ids= or keys=")
+        with self._mutate_lock:
+            if keys is not None:
+                ids = self._ensure_keymap().drop(keys)
+            self.backend.delete(ids)
+        if self.registry.enabled:
+            self._m_ing_deletes.inc(int(np.asarray(ids).size))
 
     def consolidate(self) -> int:
         """FreshVamana compaction pass; returns repaired row count."""
         self._need("mutable", "consolidate()")
-        return self.backend.consolidate()
+        with self._mutate_lock:
+            return self.backend.consolidate()
+
+    def _ensure_keymap(self):
+        if self._keymap is None:
+            from repro.ingest.keys import KeyMap
+            self._keymap = KeyMap()
+        return self._keymap
+
+    @property
+    def keys(self):
+        """The caller-key ↔ gid map (``repro.ingest.KeyMap``); empty
+        until the first keyed upsert."""
+        return self._ensure_keymap()
+
+    def ingest_queue(self, batch_size: Optional[int] = None):
+        """An ``IngestQueue`` over this database: thread-safe ``put()``
+        of rows (+ keys/labels), coalesced into locality-grouped graph
+        insertions of ``spec.ingest.batch_size`` rows, pumped by the
+        serving frontend (``serve(ingest=...)``) or explicitly."""
+        self._need("mutable", "ingest_queue()")
+        from repro.ingest.queue import IngestQueue
+        return IngestQueue(self, batch_size=batch_size)
 
     # ---------------------------------------------------------------- persist
     def save(self) -> None:
         """Flush every persisted structure (blocks, tombstones, label
-        entries, catapult buckets + adapt telemetry where live) so
+        entries, catapult buckets + adapt telemetry where live, the
+        ingest spec + key map + bootstrap indirection) so
         ``repro.db.open(spec.path)`` resumes this exact state."""
         self._need("persistent", "save()")
-        self.backend.save()
+        with self._mutate_lock:
+            self._stage_ingest_manifest()
+            self.backend.save()
+            self._persist_ingest_state()
+
+    def _stage_ingest_manifest(self) -> None:
+        """Hand the sharded manifest its durable ingest entries BEFORE
+        the engine rewrites it (``save``/every ``insert_batch`` rewrite
+        the manifest from scratch — ``manifest_extra`` is merged in
+        each time, so the pointers survive)."""
+        if self.spec.ingest is None and self._keymap is None:
+            return
+        base = getattr(self.backend, "inner", self.backend)
+        extra = getattr(base, "manifest_extra", None)
+        if extra is None:
+            return
+        if self.spec.ingest is not None:
+            extra["ingest"] = self.spec.ingest.to_dict()
+        extra["keys"] = "keys.npz"
+
+    def _persist_ingest_state(self) -> None:
+        """Sidecars beside the saved index: the IngestSpec json (single
+        stores + tiered directories; the sharded tier carries it in the
+        manifest instead) and the keys npz (key map + bootstrap
+        external-id indirection)."""
+        import json as _json
+        import os as _os
+        from repro.ingest.keys import (ingest_spec_path, ingest_state_path,
+                                       write_ingest_state)
+        path = self.spec.path
+        bootstrap = getattr(self.backend, "persist_arrays", None)
+        if self._keymap is None and bootstrap is None:
+            return
+        state = bootstrap() if bootstrap is not None else {}
+        write_ingest_state(ingest_state_path(self.caps.tier, path),
+                           self._keymap, state.get("ext2int"),
+                           state.get("ext_tomb"),
+                           ext_labels=state.get("ext_labels"))
+        if self.spec.ingest is not None and self.caps.tier != "sharded":
+            sp = ingest_spec_path(self.caps.tier, path)
+            tmp = sp + ".tmp"
+            with open(tmp, "w") as f:
+                _json.dump(self.spec.ingest.to_dict(), f, indent=1)
+            _os.replace(tmp, sp)
 
     def close(self) -> None:
         close = getattr(self.backend, "close", None)
@@ -273,24 +419,49 @@ class Database:
 
     # ---------------------------------------------------------------- serve
     def serve(self, *, max_batch: int = 64, k: Optional[int] = None,
-              beam_width: Optional[int] = None, maintain=None):
+              beam_width: Optional[int] = None, maintain=None,
+              ingest=None):
         """One-line serving: a micro-batching ``VectorSearchFrontend``
         over this database, with the drift-aware ``CatapultMaintainer``
         attached when the spec carries an adapt policy.
 
         ``maintain``: None = follow ``spec.adapt``; False = never
         attach; a ``PolicyConfig`` = attach with that policy.
+
+        ``ingest``: an ``IngestQueue`` (or True for a fresh one via
+        ``ingest_queue()``) the frontend pumps once per flush — the
+        ingest-while-serving interleave.  The queue rides on the
+        returned frontend as ``fe.ingest``.
         """
         from repro.serving.engine import VectorSearchFrontend
         maintainer = None
+        deferred_policy = None
         policy = self.spec.adapt if maintain is None else maintain
         if policy:
-            maintainer = self.attach_maintainer(
-                policy if policy is not True else None)
+            if self.backend.mode != "catapult":
+                # fail at serve() time, not inside the upsert that
+                # happens to trigger the deferred cutover attach
+                raise CapabilityError(
+                    f"maintainer needs mode='catapult', this database "
+                    f"is {self.backend.mode!r}")
+            if getattr(self.backend, "bootstrap_phase", "graph") != "graph":
+                # no catapult buckets exist before the seed→graph
+                # cutover; attach the moment they do
+                deferred_policy = policy
+            else:
+                maintainer = self.attach_maintainer(
+                    policy if policy is not True else None)
+        if ingest is True:
+            ingest = self.ingest_queue()
         fe = VectorSearchFrontend(
             self.backend, k=k or self.spec.k, max_batch=max_batch,
             beam_width=beam_width or self.spec.beam_width,
-            maintainer=maintainer, metrics=self.registry)
+            maintainer=maintainer, metrics=self.registry, ingest=ingest)
+        if deferred_policy is not None:
+            def _attach(_eng, _policy=deferred_policy, _fe=fe):
+                _fe.maintainer = self.attach_maintainer(
+                    _policy if _policy is not True else None)
+            self.backend.on_cutover(_attach)
         # the frontend's rolling window (QPS, occupancy, flush p99)
         # rides into db.metrics() as a pull collector
         self.registry.register_collector(fe.window.as_collector())
@@ -301,6 +472,9 @@ class Database:
         ``TieredMaintainer`` on the tiered tier (catapult maintenance +
         hot/cold rebalancing in one tick), ``CatapultMaintainer``
         elsewhere; resumes any adapt telemetry a reopened index carried.
+        The maintainer shares this database's mutate lock and, when the
+        spec carries ``ingest.consolidate_threshold``, runs background
+        ``consolidate()`` whenever the tombstone fraction crosses it.
         """
         from repro.adapt import CatapultMaintainer
         if self.backend.mode != "catapult":
@@ -311,9 +485,13 @@ class Database:
         if self.caps.tier == "tiered":
             from repro.tiered import TieredMaintainer
             cls = TieredMaintainer
+        ing = self.spec.ingest
         self.maintainer = cls(
             self.backend, policy or self.spec.adapt,
-            tick_every=tick_every or self.spec.adapt_tick_every)
+            tick_every=tick_every or self.spec.adapt_tick_every,
+            consolidate_threshold=(ing.consolidate_threshold
+                                   if ing is not None else 0.0),
+            mutate_lock=self._mutate_lock)
         return self.maintainer
 
     # ---------------------------------------------------------------- warmup
@@ -369,15 +547,20 @@ class Database:
     @property
     def vectors(self) -> np.ndarray:
         """Host view of the active rows — ground-truth material for
-        benches/tests (``caps.host_views`` tiers only)."""
+        benches/tests (``caps.host_views`` tiers only).  Indexed by
+        EXTERNAL id on an ingest-born database (compacted rows zeroed)."""
         self._need("host_views", "db.vectors")
-        return self.backend._vec_np[: self.backend.n_active]
+        n = getattr(self.backend, "ext_rows", self.backend.n_active)
+        return self.backend._vec_np[:n]
 
     @property
     def tombstones(self) -> np.ndarray:
-        """Tombstone flags for the active rows (``caps.host_views``)."""
+        """Tombstone flags for the active rows (``caps.host_views``).
+        On an ingest-born database the index is the EXTERNAL id space —
+        ids outlive compaction, so a dropped row still reads True."""
         self._need("host_views", "db.tombstones")
-        return self.backend._tomb_np[: self.backend.n_active]
+        n = getattr(self.backend, "ext_rows", self.backend.n_active)
+        return self.backend._tomb_np[:n]
 
     # ---------------------------------------------------------------- I/O
     def io_stats(self, reset: bool = False):

@@ -77,17 +77,36 @@ def _caps(tier: str, filtered: bool, host_views: bool = True) -> Caps:
                 host_views=bool(host_views))
 
 
-def create(spec: IndexSpec, vectors: np.ndarray,
+def create(spec: IndexSpec, vectors: Optional[np.ndarray] = None,
            labels: Optional[np.ndarray] = None,
            prebuilt=None) -> Database:
     """Build a fresh database per ``spec`` from ``vectors`` (+ per-row
     ``labels`` when ``spec.filters``); pre-warms and returns it.
+
+    ``vectors=None`` bootstraps EMPTY: the returned database serves
+    immediately (``spec.dim`` required — there is nothing to infer it
+    from) and builds its medoid/graph incrementally as the first rows
+    ``upsert`` in — see ``repro.ingest`` / ``docs/INGEST.md``.
 
     ``prebuilt``: optional (adjacency, medoid[, label_entries]) from a
     previous build over the SAME vectors — the benches' unified-codebase
     control (systems under comparison differ only in entry-point
     selection, never in graph).  Single-store tiers only.
     """
+    if vectors is None:
+        if labels is not None or prebuilt is not None:
+            raise ValueError("create(spec) with no vectors takes neither "
+                             "labels nor a prebuilt graph — stream rows "
+                             "in through upsert()")
+        from repro.db.spec import IngestSpec
+        from repro.ingest.bootstrap import BootstrapEngine
+        eng = BootstrapEngine(spec)
+        spec = eng.spec          # ingest defaults materialized
+        db = Database(eng, spec,
+                      _caps(spec.tier, spec.filters,
+                            host_views=_host_views_empty(spec)))
+        db.warm()
+        return db
     vectors = np.ascontiguousarray(vectors, np.float32)
     n, d = vectors.shape
     if spec.dim is not None and spec.dim != d:
@@ -100,7 +119,24 @@ def create(spec: IndexSpec, vectors: np.ndarray,
     if prebuilt is not None and spec.tier in ("sharded", "tiered"):
         raise ValueError("prebuilt graphs are single-store only — each "
                          "shard/tier builds over its own row set")
+    eng = _build_engine(spec, vectors, labels, n_labels, prebuilt)
+    if spec.tier == "tiered":
+        spec = dataclasses.replace(spec, tiered=eng.tiered)
+    db = Database(eng, spec,
+                  _caps(spec.tier, labels is not None,
+                        host_views=_host_views(spec.tier, eng)))
+    db.warm()
+    return db
 
+
+def _build_engine(spec: IndexSpec, vectors: np.ndarray,
+                  labels: Optional[np.ndarray], n_labels: Optional[int],
+                  prebuilt=None):
+    """Construct + build the tier backend — the ONE construction path,
+    shared by ``create()`` and the bootstrap engine's cutover/growth
+    rebuilds (which is what makes a streamed-in index identical to a
+    batch-built twin of the same rows)."""
+    n = vectors.shape[0]
     if spec.tier == "ram":
         from repro.core.engine import VectorSearchEngine
         eng = VectorSearchEngine(
@@ -132,7 +168,6 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             io=spec.io, hop_backend=spec.hop_backend, tiered=cfg)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   spare_capacity=spec.spare_capacity)
-        spec = dataclasses.replace(spec, tiered=cfg)
     else:
         from repro.store.sharded_store import ShardedDiskVectorSearchEngine
         eng = ShardedDiskVectorSearchEngine(
@@ -143,12 +178,20 @@ def create(spec: IndexSpec, vectors: np.ndarray,
             hop_backend=spec.hop_backend)
         eng.build(vectors, labels=labels, n_labels=n_labels,
                   spare_capacity=spec.spare_capacity)
+    return eng
 
-    db = Database(eng, spec,
-                  _caps(spec.tier, labels is not None,
-                        host_views=_host_views(spec.tier, eng)))
-    db.warm()
-    return db
+
+def _host_views_empty(spec: IndexSpec) -> bool:
+    """host_views for a bootstrapped database, decided from the spec
+    alone (there is no engine yet): same rule as ``_host_views`` —
+    the bootstrap wrapper gathers its external-order views from any
+    single-store backend."""
+    from repro.db.spec import TieredSpec
+    if spec.tier == "sharded":
+        return False
+    if spec.tier == "tiered":
+        return (spec.tiered or TieredSpec()).cold_tier != "sharded"
+    return True
 
 
 def _host_views(tier: str, eng) -> bool:
@@ -209,8 +252,41 @@ def open(path: str, *, mode: Optional[str] = None,
         n_shards=getattr(eng, "n_shards", runtime.n_shards),
         io=getattr(eng, "io", runtime.io),
         hop_backend=getattr(eng, "hop_backend", runtime.hop_backend),
-        tiered=(eng.tiered if tier == "tiered" else runtime.tiered))
+        tiered=(eng.tiered if tier == "tiered" else runtime.tiered),
+        ingest=runtime.ingest or _read_persisted_ingest(tier, path))
+    # a keys sidecar restores the keymap; when it also carries the
+    # bootstrap indirection (the database was born empty) the backend
+    # rewraps so external ids keep resolving exactly as before
+    from repro.ingest.keys import ingest_state_path, read_ingest_state
+    state = read_ingest_state(ingest_state_path(tier, path))
+    keymap = None
+    if state is not None:
+        from repro.ingest.bootstrap import BootstrapEngine
+        from repro.ingest.keys import KeyMap
+        keymap = KeyMap.from_arrays(state)
+        if "ext2int" in state:
+            eng = BootstrapEngine.resume(opened, eng, state)
+            opened = eng.spec
     db = Database(eng, opened, _caps(tier, eng.filtered,
-                                     host_views=_host_views(tier, eng)))
+                                     host_views=_host_views(tier, eng)),
+                  keymap=keymap)
     db.warm()
     return db
+
+
+def _read_persisted_ingest(tier: str, path: str):
+    """The IngestSpec a persisted index carries: the manifest ``ingest``
+    entry on the sharded tier, an ``ingest.json`` sidecar elsewhere.
+    None when the index predates the ingest subsystem."""
+    from repro.db.spec import IngestSpec
+    from repro.ingest.keys import ingest_spec_path
+    if tier == "sharded":
+        from repro.store.sharded_store import MANIFEST_NAME
+        with builtins.open(os.path.join(path, MANIFEST_NAME)) as f:
+            d = json.load(f).get("ingest")
+        return IngestSpec.from_dict(d) if d else None
+    p = ingest_spec_path(tier, path)
+    if not os.path.exists(p):
+        return None
+    with builtins.open(p) as f:
+        return IngestSpec.from_dict(json.load(f))

@@ -1,0 +1,20 @@
+"""Streaming ingest: empty bootstrap, caller keys, ingest-while-serving.
+
+The subsystem behind ``catapultdb.create(spec)`` with no vectors and
+``db.upsert(vectors, keys=...)`` — see ``docs/INGEST.md``:
+
+* ``BootstrapEngine`` — the empty → seed-brute-force → graph state
+  machine with a stable external-id space over any tier backend;
+* ``KeyMap`` — the persisted caller-key ↔ gid indirection;
+* ``IngestQueue`` — batched concurrent upserts, Slipstream-style
+  locality grouped, interleaved with serving flushes;
+* ``IngestSpec`` — the validated sub-config (re-exported from
+  ``repro.db.spec``, where it lives beside ``IoSpec``/``TieredSpec``).
+"""
+from repro.db.spec import IngestSpec
+from repro.ingest.bootstrap import BootstrapEngine
+from repro.ingest.keys import KeyMap
+from repro.ingest.queue import IngestQueue, Ticket, locality_order
+
+__all__ = ["BootstrapEngine", "IngestQueue", "IngestSpec", "KeyMap",
+           "Ticket", "locality_order"]

@@ -72,12 +72,16 @@ class VectorSearchFrontend:
 
     def __init__(self, backend, *, k: int = 10, max_batch: int = 64,
                  beam_width: Optional[int] = None, maintainer=None,
-                 metrics=None):
+                 metrics=None, ingest=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.backend = backend
         self.k, self.max_batch, self.beam_width = k, max_batch, beam_width
         self.maintainer = maintainer
+        # an attached repro.ingest.IngestQueue is pumped once per
+        # flush()/bulk search() — writes interleave with serving at
+        # flush granularity instead of competing for the backend
+        self.ingest = ingest
         # ticket queue entries: (ticket, query, k, beam_width) with the
         # per-request overrides already resolved against the defaults
         self._queue: list[tuple[int, np.ndarray, int, Optional[int]]] = []
@@ -164,6 +168,8 @@ class VectorSearchFrontend:
                 queries=served, occupancy=float(np.mean(occupancy)), ms=ms)
             self._m_flushes.inc()
             self._m_flush_ms.observe(ms)
+        if self.ingest is not None:
+            self.ingest.pump()
         return out
 
     def search(self, queries: np.ndarray, k: Optional[int] = None,
@@ -191,6 +197,8 @@ class VectorSearchFrontend:
                                  occupancy=float(np.mean(occupancy)), ms=ms)
         self._m_flushes.inc()
         self._m_flush_ms.observe(ms)
+        if self.ingest is not None:
+            self.ingest.pump()
         return (np.concatenate(all_ids), np.concatenate(all_d), all_stats)
 
 

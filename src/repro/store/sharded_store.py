@@ -103,6 +103,11 @@ class ShardedDiskVectorSearchEngine:
     dim: int = 0
     filtered: bool = False
     n_labels: int = 0
+    # durable caller-owned manifest entries (e.g. the ingest subsystem's
+    # "ingest" spec + "keys" sidecar pointer): _write_manifest regenerates
+    # the manifest from scratch on EVERY insert/save, so anything that
+    # must survive those rewrites lives here and is merged in each time
+    manifest_extra: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.n_shards < 1:
@@ -197,6 +202,7 @@ class ShardedDiskVectorSearchEngine:
                 "catapult_enabled": bool(eng.catapult_enabled),
             } for s, eng in enumerate(self.shards)],
         }
+        manifest.update(self.manifest_extra)
         tmp = os.path.join(self.store_dir, MANIFEST_NAME + ".tmp")
         with open(tmp, "w") as f:
             json.dump(manifest, f, indent=1)
@@ -369,6 +375,14 @@ class ShardedDiskVectorSearchEngine:
         for eng in self.shards:
             eng.reset_io()
 
+    def tombstone_fraction(self) -> float:
+        """Dead-row share across every shard (maintainer's background-
+        consolidate trigger)."""
+        dead = sum(int(eng._tomb_np[:eng.n_active].sum())
+                   for eng in self.shards)
+        n = sum(int(eng.n_active) for eng in self.shards)
+        return dead / n if n else 0.0
+
     # ---------------------------------------------------------------- persist
     def save(self) -> None:
         """Flush every shard + manifest, and snapshot catapult buckets.
@@ -421,6 +435,10 @@ class ShardedDiskVectorSearchEngine:
         self.dim = int(manifest["dim"])
         self.filtered = bool(manifest.get("filtered", False))
         self.n_labels = int(manifest.get("n_labels", 0))
+        # keep caller-owned entries durable across future rewrites
+        self.manifest_extra = {key: manifest[key]
+                               for key in ("ingest", "keys")
+                               if key in manifest}
         if self.io is None and "io" in manifest:
             # no caller preference: resume the I/O engine config the
             # index was tuned with (pre-io manifests fall through to

@@ -608,6 +608,10 @@ class TieredVectorSearchEngine:
     def reset_io(self) -> None:
         self.cold.reset_io()
 
+    def tombstone_fraction(self) -> float:
+        """Dead-row share of the canonical (cold) row range."""
+        return self.cold.tombstone_fraction()
+
     @property
     def cache_stats(self) -> CacheStats:
         return self.cold.cache_stats

@@ -26,12 +26,13 @@ class TieredMaintainer(CatapultMaintainer):
     """Catapult maintenance + hot/cold rebalancing in one tick."""
 
     def __init__(self, engine, policy: pol.PolicyConfig | None = None,
-                 tick_every: int = 32):
+                 tick_every: int = 32, **kwargs):
         if not hasattr(engine, "rebalance"):
             raise ValueError("TieredMaintainer wraps a tiered engine "
                              "(needs .rebalance()); got "
                              f"{type(engine).__name__}")
-        super().__init__(engine, policy=policy, tick_every=tick_every)
+        super().__init__(engine, policy=policy, tick_every=tick_every,
+                         **kwargs)
         self.tiered = engine
 
     def _tick_locked(self) -> None:

@@ -1,0 +1,428 @@
+"""Streaming ingest: empty bootstrap, keyed upsert, ingest-while-serving.
+
+The acceptance bar for the ingest subsystem, held at the public API:
+
+* ``create(spec)`` with no vectors returns a database that serves
+  immediately (empty → all-miss results, not an error), brute-forces a
+  seed buffer, and cuts over to a real graph index at a deterministic
+  point — after streaming the full corpus through ``upsert`` its recall
+  matches a batch-built twin of the same spec on EVERY tier.
+* ``upsert(..., keys=...)`` / ``delete(keys=...)`` give true-upsert
+  semantics over caller-owned keys: a re-used key tombstones the old
+  row, keys are homogeneous per database, and the key↔gid map persists
+  with the index (single-store sidecar / sharded manifest entry) and
+  resumes through ``open``.
+* gids come back in CALLER row order on every tier even when the batch
+  is locality-grouped internally (``db.vectors[gids] == the rows
+  handed in``), including the sharded tier's capacity-ranged ids when
+  one ``insert_batch`` spans shards.
+* ingest interleaves with serving: an ``IngestQueue`` pumped by the
+  frontend's flush cadence, with the maintainer's threshold-driven
+  background ``consolidate()`` reclaiming tombstoned rows under
+  traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import db as catapultdb
+from repro.core import brute_force_knn, recall_at_k
+from repro.db import IndexSpec, IngestSpec
+from repro.ingest import BootstrapEngine, IngestQueue, KeyMap, locality_order
+
+D = 16
+N = 500
+
+
+@pytest.fixture(scope="module")
+def world():
+    rng = np.random.default_rng(42)
+    corpus = rng.standard_normal((N, D)).astype(np.float32)
+    # enough queries that recall comparisons measure graph quality, not
+    # build-to-build variance (240 pairs swing several points on their
+    # own; 1280 pairs hold the 1-point acceptance bar steady)
+    queries = rng.standard_normal((128, D)).astype(np.float32)
+    return corpus, queries, brute_force_knn(corpus, queries, 10)
+
+
+def _spec(tier, path=None, **ingest_kw):
+    kw = dict(bootstrap_cutover=128, initial_capacity=200, batch_size=64)
+    kw.update(ingest_kw)
+    return IndexSpec(tier=tier, mode="catapult", dim=D, degree=16,
+                     build_beam=32, seed=0, path=path,
+                     n_shards=3 if tier == "sharded" else 2,
+                     ingest=IngestSpec(**kw))
+
+
+def _stream(db, corpus, bs=64):
+    """Feed the corpus through upsert; returns caller-row → gid."""
+    gids = []
+    for lo in range(0, len(corpus), bs):
+        gids.append(db.upsert(corpus[lo: lo + bs]))
+    return np.concatenate(gids)
+
+
+def _rows_of(ids, gids, n):
+    """Map returned gids back to corpus rows for recall in row space."""
+    inv = np.full(int(gids.max()) + 1, -1, np.int64)
+    inv[gids] = np.arange(n)
+    ids = np.asarray(ids)
+    return np.where(ids >= 0, inv[np.clip(ids, 0, inv.shape[0] - 1)], -1)
+
+
+# ---------------------------------------------------------------- spec
+
+
+def test_ingest_spec_validation_and_roundtrip():
+    s = IngestSpec(batch_size=32, bootstrap="direct", initial_capacity=64)
+    assert IngestSpec.from_dict(s.to_dict()) == s
+    # unknown keys in a persisted dict are ignored (forward compat)
+    assert IngestSpec.from_dict({**s.to_dict(), "new_field": 1}) == s
+    for bad in [dict(batch_size=0), dict(bootstrap="noop"),
+                dict(bootstrap_cutover=1), dict(initial_capacity=0),
+                dict(grow_factor=1.0), dict(consolidate_threshold=1.5)]:
+        with pytest.raises(ValueError):
+            IngestSpec(**bad)
+    with pytest.raises(ValueError, match="ingest must be an IngestSpec"):
+        IndexSpec(tier="ram", dim=D, ingest={"batch_size": 32})
+
+
+# ------------------------------------------------------- empty bootstrap
+
+
+def test_empty_create_serves_immediately(world):
+    _, queries, _ = world
+    db = catapultdb.create(_spec("ram"))
+    assert db.backend.bootstrap_phase == "empty"
+    assert db.n_active == 0
+    ids, dists, _ = db.search(queries, k=5)
+    assert (np.asarray(ids) == -1).all()
+    assert np.isinf(np.asarray(dists)).all()
+    # nothing to persist yet: an empty database has no artifact
+    with pytest.raises(RuntimeError, match="never"):
+        db.backend.save()
+
+
+def test_empty_create_rejects_labels_and_prebuilt():
+    with pytest.raises(ValueError):
+        catapultdb.create(IndexSpec(tier="ram", dim=D),
+                          labels=np.zeros(3, np.int32))
+    with pytest.raises(ValueError, match="dim"):
+        catapultdb.create(IndexSpec(tier="ram"))   # empty needs a dim
+
+
+def test_seed_phase_brute_force_is_exact(world):
+    corpus, _, _ = world
+    db = catapultdb.create(_spec("ram", bootstrap_cutover=256))
+    g = db.upsert(corpus[:40])
+    assert db.backend.bootstrap_phase == "seed"
+    assert sorted(g) == list(range(40))
+    truth = brute_force_knn(corpus[:40], corpus[:40], 3)
+    ids, _, _ = db.search(corpus[:40], k=3)
+    # seed search IS brute force: row-space results match ground truth
+    rows = _rows_of(ids, g, 40)
+    assert (rows == truth).all()
+    # deletes are honored pre-cutover
+    db.delete(g[:5])
+    ids, _, _ = db.search(corpus[:5], k=1)
+    assert not np.isin(np.asarray(ids).ravel(), g[:5]).any()
+
+
+def test_direct_bootstrap_cuts_over_on_first_batch(world):
+    corpus, _, _ = world
+    db = catapultdb.create(_spec("ram", bootstrap="direct"))
+    db.upsert(corpus[:64])
+    assert db.backend.bootstrap_phase == "graph"
+    assert db.backend.cutovers == 1
+
+
+# ------------------------------------------- streaming parity (tentpole)
+
+
+@pytest.mark.parametrize("tier", ["ram", "disk", "sharded"])
+def test_streaming_recall_matches_batch_twin(world, tier, tmp_path):
+    """THE acceptance criterion: stream the full corpus into a database
+    born empty; recall within 1 point of a batch-built index of the
+    same spec — growth rebuilds (initial_capacity << N) included."""
+    corpus, queries, truth = world
+    path = (str(tmp_path / f"st_{tier}") if tier != "ram" else None)
+    db = catapultdb.create(_spec(tier, path))
+    gids = _stream(db, corpus)
+    assert db.backend.bootstrap_phase == "graph"
+    assert db.backend.growths >= 1          # capacity started at 200 << N
+    assert db.n_active == N
+
+    twin_spec = dataclasses.replace(_spec(tier, path), ingest=None,
+                                    path=(str(tmp_path / f"tw_{tier}")
+                                          if tier != "ram" else None))
+    twin = catapultdb.create(twin_spec, corpus)
+    i1, _, _ = db.search(queries, k=10)
+    i2, _, _ = twin.search(queries, k=10)
+    r_stream = recall_at_k(_rows_of(i1, gids, N), truth)
+    r_batch = recall_at_k(np.asarray(i2), truth)
+    assert r_stream >= r_batch - 0.01, (r_stream, r_batch)
+    db.close()
+    twin.close()
+
+
+def test_streamed_arrival_order_matches_batch_build(world):
+    """Cutover determinism, the strong form: with no locality grouping
+    and no growth, the streamed engine's graph IS the batch build's —
+    identical ids and distances, not merely comparable recall."""
+    corpus, queries, _ = world
+    sub = corpus[:256]
+    db = catapultdb.create(_spec("ram", bootstrap_cutover=256,
+                                 initial_capacity=256,
+                                 locality_group=False))
+    _stream(db, sub)
+    twin = catapultdb.create(
+        dataclasses.replace(_spec("ram"), ingest=None, spare_capacity=0),
+        sub)
+    i1, d1, _ = db.search(queries, k=10)
+    i2, d2, _ = twin.search(queries, k=10)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    assert np.allclose(np.asarray(d1), np.asarray(d2))
+
+
+# ------------------------------------- caller-order gids (satellite)
+
+
+@pytest.mark.parametrize("tier", ["ram", "disk", "sharded", "tiered"])
+def test_upsert_gids_in_caller_order_every_tier(world, tier, tmp_path):
+    """``db.upsert`` returns gids in CALLER row order on every tier:
+    ``db.vectors[gids[i]]`` is the i-th row handed in, even though the
+    batch is locality-grouped before it hits the engine and (sharded)
+    split across capacity-ranged shards."""
+    corpus, _, _ = world
+    path = (str(tmp_path / f"go_{tier}") if tier != "ram" else None)
+    db = catapultdb.create(_spec(tier, path))
+    batch = corpus[:150]                      # > batch_size, > one shard
+    gids = db.upsert(batch)
+    assert len(set(gids.tolist())) == len(batch)
+    # the backend's ext-ordered host view works on every tier (the
+    # sharded tier withholds the `db.vectors` capability)
+    assert np.allclose(db.backend._vec_np[gids], batch, atol=1e-6)
+    # ... and again post-cutover, where locality grouping is live
+    _stream(db, corpus[150:400])
+    assert db.backend.bootstrap_phase == "graph"
+    batch2 = corpus[400:480]
+    gids2 = db.upsert(batch2)
+    assert np.allclose(db.backend._vec_np[gids2], batch2, atol=1e-6)
+    db.close()
+
+
+def test_sharded_insert_batch_caller_order_contract(world, tmp_path):
+    """The raw engine contract the facade depends on: a sharded
+    ``insert_batch`` spanning shards returns one gid per input row, in
+    input order, each pointing at its own vector."""
+    corpus, _, _ = world
+    spec = IndexSpec(tier="sharded", mode="catapult", degree=16,
+                     build_beam=32, seed=0, n_shards=3,
+                     spare_capacity=120, path=str(tmp_path / "raw"))
+    db = catapultdb.create(spec, corpus[:300])
+    eng = db.backend
+    batch = corpus[300:400]                   # 100 rows over 3 shards
+    gids = np.asarray(eng.insert_batch(batch), np.int64)
+    assert gids.shape == (100,)
+    off = np.asarray(eng.offsets, np.int64)
+    which = np.searchsorted(off, gids, side="right") - 1
+    assert len(np.unique(which)) > 1          # genuinely split
+    for i in (0, 37, 63, 99):
+        s = int(which[i])
+        local = int(gids[i] - off[s])
+        assert np.allclose(eng.shards[s]._vec_np[local], batch[i],
+                           atol=1e-6)
+    db.close()
+
+
+# --------------------------------------------------------- keyed upsert
+
+
+def test_keyed_upsert_true_semantics(world):
+    corpus, _, _ = world
+    db = catapultdb.create(_spec("ram"))
+    _stream(db, corpus[:300])
+    g1 = db.upsert(corpus[:3] + 10.0, keys=["a", "b", "c"])
+    assert len(db.keys) == 3 and db.keys["a"] == g1[0]
+    # re-upsert under the same key: new row wins, old row tombstoned
+    g2 = db.upsert(corpus[:1] + 20.0, keys=["a"])
+    assert db.keys["a"] == g2[0] != g1[0]
+    assert db.tombstones[g1[0]] and not db.tombstones[g2[0]]
+    ids, _, _ = db.search(corpus[:1] + 20.0, k=1)
+    assert int(ids[0, 0]) == int(g2[0])
+    # delete by key; unknown keys raise; key kinds are homogeneous
+    db.delete(keys=["b"])
+    assert db.tombstones[g1[1]] and "b" not in db.keys
+    with pytest.raises(KeyError):
+        db.delete(keys=["b"])
+    with pytest.raises(TypeError, match="str"):
+        db.upsert(corpus[:1], keys=[7])
+    with pytest.raises(TypeError):
+        db.upsert(corpus[:1], keys=[True])
+    with pytest.raises(TypeError, match="exactly one"):
+        db.delete(g2, keys=["c"])
+    with pytest.raises(ValueError, match="keys"):
+        db.upsert(corpus[:2], keys=["x"])
+
+
+def test_keymap_duplicate_keys_last_write_wins():
+    m = KeyMap()
+    old = m.assign([5, 6, 5], np.asarray([10, 11, 12]))
+    assert old.tolist() == [-1, -1, 10]       # earlier row reported stale
+    assert m.get(5) == 12
+    m2 = KeyMap.from_arrays(m.to_arrays())
+    assert m2.get(5) == 12 and m2.get(6) == 11 and len(m2) == 2
+
+
+# ---------------------------------------------------------- persistence
+
+
+@pytest.mark.parametrize("tier", ["disk", "sharded"])
+def test_ingest_state_persists_and_resumes(world, tier, tmp_path):
+    corpus, queries, _ = world
+    path = str(tmp_path / f"p_{tier}")
+    db = catapultdb.create(_spec(tier, path))
+    gids = _stream(db, corpus[:300])
+    db.upsert(corpus[:2] + 10.0, keys=[100, 101])
+    db.delete(keys=[100])
+    db.save()
+    # search AFTER save: catapult bucket state is adaptive, so both
+    # sides must start their next search from the same persisted state
+    i1, d1, _ = db.search(queries, k=10)
+    db.close()
+
+    db2 = catapultdb.open(path)
+    assert db2.spec.ingest == _spec(tier, path).ingest
+    assert isinstance(db2.backend, BootstrapEngine)
+    assert 101 in db2.keys and 100 not in db2.keys
+    i2, d2, _ = db2.search(queries, k=10)
+    assert (np.asarray(i1) == np.asarray(i2)).all()
+    assert np.allclose(np.asarray(d1), np.asarray(d2))
+    # the reopened database keeps ingesting: ext ids continue, upsert by
+    # key replaces the persisted row
+    g3 = db2.upsert(corpus[2:3] + 10.0, keys=[101])
+    assert db2.keys[101] == g3[0]
+    assert int(g3[0]) > int(np.max(gids))
+    db2.close()
+
+
+def test_sharded_manifest_keeps_ingest_keys_across_rewrites(world, tmp_path):
+    """The sharded manifest is regenerated on every insert — the
+    ``ingest`` / ``keys`` entries must survive that rewrite."""
+    corpus, _, _ = world
+    path = str(tmp_path / "man")
+    db = catapultdb.create(_spec("sharded", path))
+    _stream(db, corpus[:300])
+    db.upsert(corpus[:1], keys=[1])
+    db.save()
+    db.upsert(corpus[1:40] + 1.0)            # insert AFTER save -> rewrite
+    db.save()
+    db.close()
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["ingest"] == IngestSpec(**_spec("sharded", path)
+                                            .ingest.to_dict()).to_dict()
+    assert manifest["keys"] == "keys.npz"
+    db2 = catapultdb.open(path)
+    assert db2.keys[1] >= 0
+    db2.close()
+
+
+# --------------------------------------------------------- ingest queue
+
+
+def test_locality_order_is_permutation_and_groups_duplicates():
+    rng = np.random.default_rng(0)
+    v = np.repeat(rng.standard_normal((5, D)).astype(np.float32), 8, 0)
+    rng.shuffle(v)
+    order = locality_order(v, seed=3)
+    assert sorted(order.tolist()) == list(range(len(v)))
+    assert (order == locality_order(v, seed=3)).all()   # deterministic
+    # identical rows land adjacently after grouping
+    codes = [tuple(np.round(v[i], 4)) for i in order]
+    runs = sum(1 for a, b in zip(codes, codes[1:]) if a != b) + 1
+    assert runs == 5
+
+
+def test_ingest_queue_batches_and_ticket_order(world):
+    corpus, _, _ = world
+    db = catapultdb.create(_spec("ram", bootstrap="direct"))
+    db.upsert(corpus[:64])
+    q = db.ingest_queue(batch_size=32)
+    t_small = q.put(corpus[64:74])
+    t_big = q.put(corpus[74:174], keys=list(range(100)))  # 100 > 32: splits
+    assert q.depth == 110
+    assert q.pump() == 32 and not t_big.done()
+    q.flush()
+    assert q.depth == 0 and t_small.done() and t_big.done()
+    assert np.allclose(db.vectors[t_small.gids], corpus[64:74], atol=1e-6)
+    assert np.allclose(db.vectors[t_big.gids], corpus[74:174], atol=1e-6)
+    assert len(db.keys) == 100
+    # a failing batch fails its tickets, not the queue
+    t_bad = q.put(np.zeros((2, D + 1), np.float32))
+    q.flush()
+    with pytest.raises(Exception):
+        t_bad.wait(0.0)
+
+
+def test_serve_ingest_interleave_with_deferred_maintainer(world):
+    """Empty database straight into ``serve(ingest=True, maintain=True)``:
+    searches pump the queue, the maintainer attaches itself AT cutover
+    (there is no catapult state to maintain before it), and threshold-
+    driven consolidation reclaims tombstones under traffic."""
+    corpus, queries, _ = world
+    db = catapultdb.create(_spec("ram", bootstrap_cutover=64, batch_size=32,
+                                 initial_capacity=128,
+                                 consolidate_threshold=0.2))
+    fe = db.serve(max_batch=8, maintain=True, ingest=True)
+    assert fe.maintainer is None              # nothing to maintain yet
+    tickets = []
+    for lo in range(0, 400, 40):
+        tickets.append(fe.ingest.put(corpus[lo: lo + 40],
+                                     keys=list(range(lo, lo + 40))))
+        fe.search(queries, k=5)               # serving pumps ingest
+    fe.ingest.flush()
+    assert all(t.done() for t in tickets)
+    assert db.n_active == 400 and len(db.keys) == 400
+    assert fe.maintainer is not None          # attached at cutover
+    db.delete(keys=list(range(150)))
+    assert db.backend.tombstone_fraction() >= 0.2
+    for _ in range(60):
+        fe.search(queries, k=5)
+    assert fe.maintainer.snapshot()["consolidations"] >= 1
+    assert db.backend.tombstone_fraction() < 0.2
+    # surviving keys still resolve post-consolidation (ext ids stable)
+    ids, _, _ = db.search(corpus[200:203], k=1)
+    for r in range(3):
+        assert int(ids[r, 0]) == db.keys[200 + r]
+
+
+# -------------------------------------------------------- observability
+
+
+def test_ingest_metrics_and_trace_spans(world):
+    corpus, queries, _ = world
+    db = catapultdb.create(_spec("ram"))
+    tr = db.search(queries[:2], k=3, explain=True)
+    assert any(s.name == "bootstrap" for s in tr.stages)
+    db.upsert(corpus[:40], keys=list(range(40)))
+    m = db.metrics("dict")
+    assert m["catapultdb_ingest_phase"] == 1.0
+    assert m["catapultdb_ingest_rows_total"] == 40.0
+    assert m["catapultdb_ingest_keys"] == 40.0
+    _stream(db, corpus[40:300])
+    q = db.ingest_queue()
+    q.put(corpus[300:310])
+    q.flush()
+    m = db.metrics("dict")
+    assert m["catapultdb_ingest_phase"] == 2.0
+    assert m["catapultdb_ingest_cutovers"] == 1.0
+    assert m["catapultdb_ingest_growths"] >= 1.0
+    assert m["catapultdb_ingest_queue_batches_flushed"] >= 1.0
+    tr = db.search(queries[:2], k=3, explain=True)
+    assert any(s.name == "ingest_map" for s in tr.stages)
